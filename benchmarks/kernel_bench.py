@@ -1,0 +1,58 @@
+"""Kernel rows for the benchmark CSV: reference-path timing + validated
+max-abs error of the Pallas kernel (interpret mode) at a representative shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_reference
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_reference
+
+from .common import emit, timed
+
+KEY = jax.random.PRNGKey(0)
+
+
+def kernel_rows() -> None:
+    ks = jax.random.split(KEY, 5)
+
+    # flash attention
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    ref, us = timed(lambda: jax.block_until_ready(flash_attention(q, k, v, impl="xla")))
+    out = flash_attention(q, k, v, impl="interpret", blk_q=64, blk_k=64)
+    emit("kernel_flash_attention", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")
+
+    # decode attention
+    qd = jax.random.normal(ks[0], (2, 1, 8, 64), jnp.float32)
+    kc = jax.random.normal(ks[1], (2, 512, 2, 64), jnp.float32)
+    vc = jax.random.normal(ks[2], (2, 512, 2, 64), jnp.float32)
+    ref, us = timed(lambda: jax.block_until_ready(decode_attention(qd, kc, vc, jnp.int32(511), impl="xla")))
+    out = decode_attention(qd, kc, vc, jnp.int32(511), impl="interpret", blk_k=128)
+    emit("kernel_decode_attention", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")
+
+    # ssm scan
+    B, T, D, N = 2, 128, 128, 8
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, T, D))) * 0.1
+    Bc = jax.random.normal(ks[1], (B, T, N))
+    Cc = jax.random.normal(ks[2], (B, T, N))
+    u = jax.random.normal(ks[3], (B, T, D))
+    A = -jnp.exp(jax.random.normal(ks[4], (D, N)) * 0.5)
+    ref, us = timed(lambda: jax.block_until_ready(ssm_scan_reference(dt, Bc, Cc, u, A)[0]))
+    out = ssm_scan(dt, Bc, Cc, u, A, impl="interpret", blk_t=32, blk_d=64)
+    emit("kernel_ssm_scan", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")
+
+    # rmsnorm
+    x = jax.random.normal(ks[0], (8, 128, 512), jnp.float32)
+    sc = jax.random.normal(ks[1], (512,)) * 0.1
+    ref, us = timed(lambda: jax.block_until_ready(rmsnorm_reference(x, sc)))
+    out = rmsnorm(x, sc, impl="interpret")
+    emit("kernel_rmsnorm", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")

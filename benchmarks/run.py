@@ -1,0 +1,43 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. The roofline report (our §Roofline
+deliverable) is appended when dry-run artifacts exist under
+experiments/dryrun (see repro.launch.dryrun / repro.launch.roofline_run).
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+
+def main() -> None:
+    from . import paper_figures as F
+
+    print("name,us_per_call,derived")
+    F.fig2_workload_characteristics()
+    F.fig3_complex_models()
+    F.fig4_bandwidth_crossovers()
+    F.fig5a_split_processing()
+    F.fig5b_request_rate()
+    F.fig5c_multitenancy()
+    F.fig6_network_adaptation()
+    F.fig7_multitenant_adaptation()
+    F.model_accuracy_suite()
+
+    # kernel micro-benchmarks (interpret-mode correctness latency on CPU is
+    # not a perf claim; rows document call overhead + validated tolerance)
+    from .kernel_bench import kernel_rows
+
+    kernel_rows()
+
+    # roofline table from dry-run artifacts, if present
+    roof = Path("experiments/roofline")
+    if roof.is_dir() and any(roof.glob("*.json")):
+        from .roofline_report import print_roofline_rows
+
+        print_roofline_rows(roof)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end training driver: train a ~100M-parameter starcoder2-family
+model for a few hundred steps on the synthetic pipeline, with checkpointing
+and (optionally) a mid-run restart to demonstrate fault-tolerant resume.
+
+Run:   PYTHONPATH=src python examples/train_lm.py [--steps 300] [--resume]
+Small: PYTHONPATH=src python examples/train_lm.py --tiny --steps 40
+"""
+
+import argparse
+import math
+
+from repro.configs import get_config
+from repro.training.train_loop import TrainConfig, Trainer
+
+
+def build_cfg(tiny: bool):
+    base = get_config("starcoder2_3b")
+    if tiny:
+        return base.reduced()
+    # ~100M-parameter member of the starcoder2 family
+    return base.reduced(
+        d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=2048, num_superblocks=8, vocab_size=32_000,
+        seq_chunk=128, name="starcoder2_100m",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.tiny)
+    from repro.models.lm import num_params
+
+    print(f"model: {cfg.name}  params={num_params(cfg)/1e6:.1f}M")
+    tc = TrainConfig(
+        steps=args.steps,
+        batch=8 if not args.tiny else 4,
+        seq_len=256 if not args.tiny else 64,
+        checkpoint_every=100,
+        checkpoint_dir=args.ckpt_dir,
+        log_every=10,
+        lr=3e-4,
+        warmup=30,
+    )
+    trainer = Trainer(cfg, tc)
+    if args.resume:
+        params, state, step = trainer.resume()
+        print(f"resumed from step {step}")
+        trainer.run(params, state, start_step=step)
+    else:
+        trainer.run()
+
+    first, last = trainer.metrics_log[0], trainer.metrics_log[-1]
+    uniform = math.log(cfg.vocab_size)
+    print(f"\nloss: {first['loss']:.3f} -> {last['loss']:.3f} "
+          f"(uniform entropy floor {uniform:.2f})")
+    print(f"final step time: {last['step_time_s']*1e3:.0f} ms; "
+          f"straggler events: {len(trainer.straggler_events)}")
+    assert last["loss"] < first["loss"], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""SeamlessM4T-large-v2 backbone [arXiv:2308.11596; hf]. Enc-dec transformer.
+
+The modality frontend (speech feature extractor) is a STUB per the assignment:
+input_specs() feeds precomputed frame embeddings of shape (B, S, d_model) to
+the encoder; the decoder consumes token ids. 24 encoder + 24 decoder layers.
+"""
+from .base import LayerSpec, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="seamless_m4t_large_v2",
+    family="encdec",
+    d_model=1024, num_heads=16, num_kv_heads=16, head_dim=64,
+    d_ff=8192, vocab_size=256206,
+    superblock=(LayerSpec("attn", "mlp"),), num_superblocks=24,  # decoder
+    encoder_layers=24,
+    prefix_embed=True,  # encoder takes precomputed frame embeddings
+    rope=True,
+    service_model="mm1",
+    supports_long_context=False,
+    notes="enc-dec; encoder bidirectional over stubbed audio-frame embeddings.",
+))

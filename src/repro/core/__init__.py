@@ -1,0 +1,50 @@
+"""The paper's contribution: closed-form queueing latency models + the
+model-driven adaptive offloading manager, plus the discrete-event simulator
+used as the hardware-free validation testbed.
+"""
+
+from .latency import (
+    LatencyBreakdown,
+    NetworkPath,
+    ServiceModel,
+    Tier,
+    Workload,
+    edge_offload_latency,
+    lemma31_rhs,
+    lemma32_rhs,
+    lemma33_rhs,
+    offload_wins,
+    on_device_latency,
+    proc_wait,
+)
+from .manager import ON_DEVICE, AdaptiveOffloadManager, Decision, EdgeServerState
+from .multitenant import (
+    AggregateLoad,
+    TenantStream,
+    aggregate_streams,
+    multitenant_edge_latency,
+)
+from .queueing import (
+    QueueStats,
+    gg1_wait_upper_bound,
+    md1_wait,
+    md1_wait_aggregated,
+    mdk_wait_approx,
+    mg1_wait,
+    mm1_response,
+    mm1_wait,
+    mm1_wait_aggregated,
+    mmk_wait_erlang,
+    utilisation,
+)
+from .service_time import ServiceEstimate, fit_parallelism, from_profile, from_roofline
+from .split import LayerProfile, SplitPlan, SplitPlanner, SplitPoint, split_latency
+from .telemetry import (
+    EwmaEstimator,
+    SlidingRateEstimator,
+    TelemetrySnapshot,
+    UtilisationEstimator,
+    WindowedMoments,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,179 @@
+"""Model-driven adaptive offloading manager — paper Algorithm 1 (§5.1).
+
+Runs on the device. Each epoch it takes a telemetry snapshot (lambda, B,
+per-edge load), evaluates the closed-form latency of every strategy —
+on-device (Eq. 2, M/D/1) and offload-to-E for each edge server E (Eq. 1 with
+M/G/1 edge processing) — and executes with the argmin. Line numbers in
+comments refer to Algorithm 1 in the paper.
+
+Beyond-paper (flag-gated, default off, recorded in EXPERIMENTS.md):
+  * hysteresis — require a relative improvement before switching strategy, to
+    damp flapping around a crossover;
+  * deadline tail-awareness — optimise a mean + z * sigma proxy instead of the
+    mean when a latency SLO is supplied.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from .latency import (
+    NetworkPath,
+    ServiceModel,
+    Tier,
+    Workload,
+    md1_wait,
+    mg1_wait,
+    mm1_wait,
+)
+from .telemetry import TelemetrySnapshot
+
+__all__ = ["EdgeServerState", "Decision", "AdaptiveOffloadManager"]
+
+ON_DEVICE = -1  # sentinel edge index for local execution
+
+
+@dataclass(frozen=True)
+class EdgeServerState:
+    """One edge server E as the manager sees it this epoch."""
+
+    name: str
+    service_rate: float  # mu_edge,E^proc — aggregated service rate (Alg. 1 input)
+    arrival_rate: float  # lambda_edge,E — aggregate load (Alg. 1 input)
+    service_time_s: float  # s_edge^proc for THIS workload on E
+    service_var: float = 0.0  # Var[s] of E's aggregate mixture (M/G/1 term)
+    parallelism_k: float = 1.0
+    bandwidth_Bps: float | None = None  # per-edge path override (else device B)
+
+
+@dataclass(frozen=True)
+class Decision:
+    strategy: str  # "on_device" | "offload"
+    edge_index: int  # ON_DEVICE or index into the edges list
+    predicted_latency_s: float
+    t_dev: float
+    t_edges: tuple[float, ...]
+    epoch: int
+
+    @property
+    def target_name(self) -> str:
+        return "on_device" if self.edge_index == ON_DEVICE else f"edge[{self.edge_index}]"
+
+
+class AdaptiveOffloadManager:
+    """Algorithm 1, plus optional hysteresis / tail-awareness extensions."""
+
+    def __init__(
+        self,
+        device: Tier,
+        *,
+        hysteresis: float = 0.0,
+        tail_z: float = 0.0,
+    ):
+        if hysteresis < 0:
+            raise ValueError("hysteresis must be >= 0")
+        self.device = device
+        self.hysteresis = hysteresis
+        self.tail_z = tail_z
+        self._epoch = 0
+        self._last: Decision | None = None
+        self.history: list[Decision] = []
+
+    # -- Algorithm 1 lines 1-2 ------------------------------------------------
+    def _predict_device(self, lam_dev: float) -> float:
+        mu_dev = 1.0 / self.device.service_time_s  # line 1
+        if self.device.service_model is ServiceModel.EXPONENTIAL:
+            w = mm1_wait(lam_dev, self.device.parallelism_k * mu_dev)
+        else:
+            w = md1_wait(lam_dev, mu_dev, self.device.parallelism_k)  # line 2
+        return float(w + self.device.service_time_s)
+
+    # -- Algorithm 1 lines 3-6 ------------------------------------------------
+    def _predict_edge(
+        self, edge: EdgeServerState, wl: Workload, lam_dev: float, bandwidth_Bps: float
+    ) -> float:
+        b = edge.bandwidth_Bps or bandwidth_Bps
+        mu_req = b / wl.req_bytes
+        mu_res = b / wl.res_bytes
+        # line 3: T_net_req <- M/M/1(lambda_dev, B/D_req) + D_req/B
+        t_req = float(mm1_wait(lam_dev, mu_req) + wl.req_bytes / b)
+        # line 4: T_net_res <- M/M/1(lambda_edge,E, B/D_res) + D_res/B
+        t_res = float(mm1_wait(edge.arrival_rate, mu_res) + wl.res_bytes / b)
+        # line 6: T_edge,E <- T_req + M/G/1(lambda_E, mu_E) + s_edge + T_res
+        w_proc = float(
+            mg1_wait(edge.arrival_rate, edge.service_rate, edge.service_var, edge.parallelism_k)
+        )
+        if self.tail_z > 0.0:
+            # beyond-paper: penalise variability when an SLO is set.
+            # sigma_w proxy: for M/G/1 the wait is roughly exponential-tailed
+            # with scale E[w]; mean + z*E[w] is a cheap upper quantile proxy.
+            w_proc = w_proc * (1.0 + self.tail_z)
+        return t_req + w_proc + edge.service_time_s + t_res
+
+    # -- Algorithm 1 lines 7-11 -----------------------------------------------
+    def decide(
+        self,
+        wl: Workload,
+        snapshot: TelemetrySnapshot,
+        edges: Sequence[EdgeServerState],
+    ) -> Decision:
+        lam_dev = snapshot.lam_dev
+        t_dev = self._predict_device(lam_dev)
+        t_edges = tuple(
+            self._predict_edge(e, wl, lam_dev, snapshot.bandwidth_Bps) for e in edges
+        )
+
+        if t_edges and np.isfinite(min(t_edges)):
+            best_edge = int(np.argmin(t_edges))
+            best_edge_t = t_edges[best_edge]
+        else:
+            best_edge, best_edge_t = ON_DEVICE, np.inf
+
+        if t_dev <= best_edge_t:  # line 7
+            choice, predicted = ON_DEVICE, t_dev  # line 8
+        else:
+            choice, predicted = best_edge, best_edge_t  # lines 10-11
+
+        # beyond-paper hysteresis: keep the previous target unless the new one
+        # improves by more than `hysteresis` relative.
+        if (
+            self.hysteresis > 0.0
+            and self._last is not None
+            and choice != self._last.edge_index
+        ):
+            prev_t = (
+                t_dev
+                if self._last.edge_index == ON_DEVICE
+                else (
+                    t_edges[self._last.edge_index]
+                    if self._last.edge_index < len(t_edges)
+                    else np.inf
+                )
+            )
+            if np.isfinite(prev_t) and predicted > (1.0 - self.hysteresis) * prev_t:
+                choice, predicted = self._last.edge_index, prev_t
+
+        decision = Decision(
+            strategy="on_device" if choice == ON_DEVICE else "offload",
+            edge_index=choice,
+            predicted_latency_s=float(predicted),
+            t_dev=t_dev,
+            t_edges=t_edges,
+            epoch=self._epoch,
+        )
+        self._epoch += 1
+        self._last = decision
+        self.history.append(decision)
+        return decision
+
+    @property
+    def switches(self) -> int:
+        """Number of strategy changes so far (flapping metric)."""
+        return sum(
+            1
+            for a, b in zip(self.history, self.history[1:])
+            if a.edge_index != b.edge_index
+        )

@@ -1,0 +1,89 @@
+"""Multi-tenant edge modelling (paper §3.4).
+
+An edge server multiplexed across m devices sees the superposition of m
+independent Poisson streams — itself Poisson with lambda_edge = sum_i lambda_i
+— and an *arbitrary mixture* service distribution, hence M/G/1 (Lemma 3.2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from .latency import NetworkPath, ServiceModel, Tier, Workload, edge_offload_latency
+
+__all__ = ["TenantStream", "AggregateLoad", "aggregate_streams", "multitenant_edge_latency"]
+
+
+@dataclass(frozen=True)
+class TenantStream:
+    """One co-located application's offloaded stream as seen by the edge."""
+
+    arrival_rate: float  # lambda_i
+    service_mean_s: float  # s_i (service time of THIS app's requests at the edge)
+    service_var: float = 0.0  # within-app service variance
+    name: str = "tenant"
+
+
+@dataclass(frozen=True)
+class AggregateLoad:
+    """The edge's effective M/G/1 inputs under multiplexing."""
+
+    arrival_rate: float  # lambda_edge
+    service_mean_s: float  # s_edge = sum_i (lambda_i/lambda_edge) s_i
+    service_var: float  # Var[s_edge] of the mixture
+    utilisation: float  # rho_edge = lambda_edge * s_edge
+
+    @property
+    def service_rate(self) -> float:
+        return 1.0 / self.service_mean_s
+
+
+def aggregate_streams(streams: Sequence[TenantStream]) -> AggregateLoad:
+    """Poisson superposition + mixture moments (paper §3.4).
+
+    lambda_edge = sum_i lambda_i                         (superposition, [43])
+    s_edge      = sum_i (lambda_i / lambda_edge) s_i     (weighted mean)
+    Var[s_edge] = E[s^2] - s_edge^2
+                = sum_i w_i (var_i + s_i^2) - s_edge^2   (law of total variance)
+    """
+    if not streams:
+        raise ValueError("need at least one tenant stream")
+    lam_edge = float(sum(t.arrival_rate for t in streams))
+    if lam_edge <= 0:
+        raise ValueError("aggregate arrival rate must be positive")
+    weights = np.array([t.arrival_rate / lam_edge for t in streams])
+    means = np.array([t.service_mean_s for t in streams])
+    variances = np.array([t.service_var for t in streams])
+    s_edge = float(weights @ means)
+    second_moment = float(weights @ (variances + means**2))
+    var = max(0.0, second_moment - s_edge**2)
+    return AggregateLoad(lam_edge, s_edge, var, lam_edge * s_edge)
+
+
+def multitenant_edge_latency(
+    wl: Workload,
+    edge: Tier,
+    net: NetworkPath,
+    streams: Sequence[TenantStream],
+    **kw,
+):
+    """End-to-end offload latency for ``wl`` when the edge also serves ``streams``.
+
+    The edge tier is re-parameterised with the aggregate mixture service
+    (mean + variance) and evaluated as M/G/1 — exactly Lemma 3.2's setting.
+    ``wl``'s own stream must be included in ``streams`` by the caller.
+    """
+    agg = aggregate_streams(streams)
+    edge_mg1 = Tier(
+        name=edge.name,
+        service_time_s=agg.service_mean_s,
+        parallelism_k=edge.parallelism_k,
+        service_model=ServiceModel.GENERAL,
+        service_var=agg.service_var,
+    )
+    return edge_offload_latency(
+        wl, edge_mg1, net, edge_arrival_rate=agg.arrival_rate, **kw
+    )

@@ -1,0 +1,138 @@
+"""Learned service-time predictor (paper §3.2, after Neurosurgeon [22]).
+
+"For model-based prediction, a neural network can be trained to predict the
+service time of a model on a given hardware ... in our experiments we adopt a
+simple neural network from [22]."
+
+A small JAX MLP maps workload features (log-FLOPs, log-params, log-payload,
+batch, sequence length, ...) to log service time. Trained with Adam +
+standardised features; used by the split planner to avoid profiling every
+split configuration (paper §4.2) and by the gateway when no profile exists.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LatencyPredictor", "workload_features"]
+
+
+def workload_features(
+    flops: float, param_bytes: float, act_bytes: float, batch: int, seq: int
+) -> np.ndarray:
+    """Canonical feature vector; logs tame the dynamic range (1e6..1e15)."""
+    return np.array(
+        [
+            np.log10(max(flops, 1.0)),
+            np.log10(max(param_bytes, 1.0)),
+            np.log10(max(act_bytes, 1.0)),
+            np.log10(max(batch, 1)),
+            np.log10(max(seq, 1)),
+        ],
+        dtype=np.float32,
+    )
+
+
+def _init_mlp(key, sizes: Sequence[int]):
+    params = []
+    for i, (fan_in, fan_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (fan_in, fan_out)) * jnp.sqrt(2.0 / fan_in)
+        params.append({"w": w.astype(jnp.float32), "b": jnp.zeros((fan_out,), jnp.float32)})
+    return params
+
+
+def _apply_mlp(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.gelu(x)
+    return x[..., 0]
+
+
+@partial(jax.jit, static_argnames=())
+def _loss(params, x, y):
+    pred = _apply_mlp(params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+@dataclass
+class _AdamState:
+    m: list
+    v: list
+    step: int
+
+
+class LatencyPredictor:
+    """MLP: standardized features -> log10(service seconds)."""
+
+    def __init__(self, n_features: int = 5, hidden: Sequence[int] = (64, 64), seed: int = 0):
+        self.sizes = [n_features, *hidden, 1]
+        self.params = _init_mlp(jax.random.PRNGKey(seed), self.sizes)
+        self._mu = np.zeros(n_features, np.float32)
+        self._sigma = np.ones(n_features, np.float32)
+        self._fitted = False
+
+    # ------------------------------------------------------------------
+    def fit(
+        self,
+        features: np.ndarray,
+        latencies_s: np.ndarray,
+        *,
+        steps: int = 2000,
+        lr: float = 1e-3,
+        batch_size: int = 256,
+        seed: int = 0,
+    ) -> float:
+        """Train on (N, F) features vs (N,) latencies. Returns final MSE (log-space)."""
+        x = np.asarray(features, np.float32)
+        y = np.log10(np.maximum(np.asarray(latencies_s, np.float32), 1e-9))
+        if x.ndim != 2 or x.shape[0] != y.shape[0]:
+            raise ValueError("features must be (N,F) matching latencies (N,)")
+        self._mu = x.mean(axis=0)
+        self._sigma = x.std(axis=0) + 1e-6
+        xn = (x - self._mu) / self._sigma
+
+        grad_fn = jax.jit(jax.value_and_grad(_loss))
+        m = jax.tree.map(jnp.zeros_like, self.params)
+        v = jax.tree.map(jnp.zeros_like, self.params)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        rng = np.random.default_rng(seed)
+        params = self.params
+        loss_val = np.inf
+        n = xn.shape[0]
+        for t in range(1, steps + 1):
+            idx = rng.integers(0, n, size=min(batch_size, n))
+            loss_val, grads = grad_fn(params, jnp.asarray(xn[idx]), jnp.asarray(y[idx]))
+            m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+            v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+            mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
+            vh = jax.tree.map(lambda a: a / (1 - b2**t), v)
+            params = jax.tree.map(
+                lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mh, vh
+            )
+        self.params = params
+        self._fitted = True
+        return float(loss_val)
+
+    # ------------------------------------------------------------------
+    def predict(self, features: np.ndarray) -> np.ndarray:
+        """Predicted service seconds for (N, F) or (F,) features."""
+        if not self._fitted:
+            raise RuntimeError("predictor not fitted")
+        x = np.atleast_2d(np.asarray(features, np.float32))
+        xn = (x - self._mu) / self._sigma
+        logs = np.asarray(_apply_mlp(self.params, jnp.asarray(xn)))
+        out = 10.0**logs
+        return out if out.shape[0] > 1 else out[0]
+
+    def mape(self, features: np.ndarray, latencies_s: np.ndarray) -> float:
+        pred = np.atleast_1d(self.predict(features))
+        obs = np.asarray(latencies_s, np.float64)
+        return float(np.mean(np.abs(pred - obs) / obs) * 100.0)

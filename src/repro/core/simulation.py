@@ -1,0 +1,383 @@
+"""Discrete-event simulation of the paper's queueing networks (Fig. 1).
+
+This is the validation testbed that stands in for the paper's physical
+device/edge/network hardware: it simulates the *exact* queueing systems the
+closed forms model — Poisson arrivals, FCFS stations with k parallel servers,
+deterministic / exponential / general service draws, and the tandem
+device-NIC -> edge-proc -> edge-NIC composition of Fig. 1a — and produces
+observed end-to-end latencies against which the analytic predictions are
+scored (MAPE, ±5% / ±10% fractions; paper §4.3 reports 2.2% / 91.5% / 100%).
+
+Implementation: feed-forward tandem FCFS networks admit an exact recursive
+simulation (Lindley recursion generalised to k servers via an
+earliest-free-server heap), which is orders of magnitude faster than a
+generic event calendar and bit-reproducible from a seed.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "ServiceDist",
+    "Deterministic",
+    "Exponential",
+    "LogNormal",
+    "Mixture",
+    "poisson_arrivals",
+    "station_pass",
+    "SimResult",
+    "simulate_tandem",
+    "simulate_on_device",
+    "simulate_offload",
+    "simulate_split",
+    "simulate_multitenant_offload",
+]
+
+
+# ---------------------------------------------------------------------------
+# Service-time distributions
+# ---------------------------------------------------------------------------
+
+
+class ServiceDist:
+    """A service-time distribution with known mean/variance."""
+
+    mean: float
+    var: float
+
+    def sample(self, n: int, rng: np.random.Generator) -> np.ndarray:
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class Deterministic(ServiceDist):
+    """Constant service (the paper's DNN-on-accelerator model [27])."""
+
+    value: float
+
+    @property
+    def mean(self) -> float:  # type: ignore[override]
+        return self.value
+
+    @property
+    def var(self) -> float:  # type: ignore[override]
+        return 0.0
+
+    def sample(self, n, rng):
+        return np.full(n, self.value, dtype=np.float64)
+
+
+@dataclass(frozen=True)
+class Exponential(ServiceDist):
+    """Exponential service (paper's RNN/LLM and NIC model)."""
+
+    mean_s: float
+
+    @property
+    def mean(self) -> float:  # type: ignore[override]
+        return self.mean_s
+
+    @property
+    def var(self) -> float:  # type: ignore[override]
+        return self.mean_s**2
+
+    def sample(self, n, rng):
+        return rng.exponential(self.mean_s, size=n)
+
+
+@dataclass(frozen=True)
+class LogNormal(ServiceDist):
+    """General service with target mean/variance (multi-tenant mixtures)."""
+
+    mean_s: float
+    var_s: float
+
+    @property
+    def mean(self) -> float:  # type: ignore[override]
+        return self.mean_s
+
+    @property
+    def var(self) -> float:  # type: ignore[override]
+        return self.var_s
+
+    def sample(self, n, rng):
+        if self.var_s == 0:
+            return np.full(n, self.mean_s)
+        sigma2 = np.log(1.0 + self.var_s / self.mean_s**2)
+        mu = np.log(self.mean_s) - 0.5 * sigma2
+        return rng.lognormal(mu, np.sqrt(sigma2), size=n)
+
+
+@dataclass(frozen=True)
+class Mixture(ServiceDist):
+    """Probabilistic mixture — the multi-tenant aggregate service (§3.4)."""
+
+    components: tuple[ServiceDist, ...]
+    weights: tuple[float, ...]
+
+    def __post_init__(self):
+        total = sum(self.weights)
+        if not np.isclose(total, 1.0):
+            object.__setattr__(self, "weights", tuple(w / total for w in self.weights))
+
+    @property
+    def mean(self) -> float:  # type: ignore[override]
+        return float(sum(w * c.mean for w, c in zip(self.weights, self.components)))
+
+    @property
+    def var(self) -> float:  # type: ignore[override]
+        m = self.mean
+        second = sum(w * (c.var + c.mean**2) for w, c in zip(self.weights, self.components))
+        return float(second - m**2)
+
+    def sample(self, n, rng):
+        idx = rng.choice(len(self.components), size=n, p=np.asarray(self.weights))
+        out = np.empty(n, dtype=np.float64)
+        for i, comp in enumerate(self.components):
+            mask = idx == i
+            cnt = int(mask.sum())
+            if cnt:
+                out[mask] = comp.sample(cnt, rng)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Core mechanics
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(lam: float, n: int, rng: np.random.Generator) -> np.ndarray:
+    """n arrival times of a Poisson(lam) process."""
+    return np.cumsum(rng.exponential(1.0 / lam, size=n))
+
+
+def station_pass(arrivals: np.ndarray, services: np.ndarray, k: int = 1) -> np.ndarray:
+    """FCFS k-server station: departure times for jobs arriving at ``arrivals``.
+
+    Jobs start in arrival order on the earliest-free server (FCFS), so
+    start_i = max(arrival_i, min(server_free)). Exact Lindley-style recursion;
+    k=1 reduces to departure_i = max(arrival_i, departure_{i-1}) + service_i.
+    """
+    n = len(arrivals)
+    if k == 1:
+        dep = np.empty(n, dtype=np.float64)
+        prev = -np.inf
+        for i in range(n):
+            start = arrivals[i] if arrivals[i] > prev else prev
+            prev = start + services[i]
+            dep[i] = prev
+        return dep
+    free = [0.0] * k
+    heapq.heapify(free)
+    dep = np.empty(n, dtype=np.float64)
+    for i in range(n):
+        earliest = heapq.heappop(free)
+        start = arrivals[i] if arrivals[i] > earliest else earliest
+        d = start + services[i]
+        dep[i] = d
+        heapq.heappush(free, d)
+    return dep
+
+
+@dataclass
+class SimResult:
+    """Observed end-to-end latencies of one simulated scenario."""
+
+    latencies: np.ndarray
+    arrivals: np.ndarray
+    warmup_frac: float = 0.1
+    stream_ids: np.ndarray | None = None
+    extras: dict = field(default_factory=dict)
+
+    def _steady(self) -> np.ndarray:
+        n0 = int(len(self.latencies) * self.warmup_frac)
+        # drop warmup AND cooldown tails (boundary effects)
+        n1 = len(self.latencies) - max(1, int(len(self.latencies) * 0.02))
+        return self.latencies[n0:n1]
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self._steady()))
+
+    def percentile(self, q: float) -> float:
+        return float(np.percentile(self._steady(), q))
+
+    def stream_mean(self, sid: int) -> float:
+        assert self.stream_ids is not None
+        n0 = int(len(self.latencies) * self.warmup_frac)
+        n1 = len(self.latencies) - max(1, int(len(self.latencies) * 0.02))
+        mask = self.stream_ids[n0:n1] == sid
+        return float(np.mean(self.latencies[n0:n1][mask]))
+
+
+def simulate_tandem(
+    arrivals: np.ndarray,
+    stages: Sequence[tuple[ServiceDist, int]],
+    rng: np.random.Generator,
+) -> SimResult:
+    """Push one arrival stream through FCFS stations in sequence.
+
+    Each stage is (service distribution, #servers). A job's arrival at stage
+    j+1 is its departure from stage j. With k>1, overtaking can occur; we sort
+    inter-stage arrival order (FCFS at the next queue is by arrival there)
+    while tracking per-job identity for latency accounting.
+    """
+    n = len(arrivals)
+    order = np.arange(n)
+    t = arrivals.copy()
+    for dist, k in stages:
+        services = dist.sample(n, rng)
+        dep = station_pass(t, services, k)
+        # re-sort by departure: that's the arrival order at the next station
+        perm = np.argsort(dep, kind="stable")
+        t = dep[perm]
+        order = order[perm]
+    latency = np.empty(n, dtype=np.float64)
+    latency[order] = t - arrivals[order]
+    return SimResult(latencies=latency, arrivals=arrivals)
+
+
+# ---------------------------------------------------------------------------
+# Paper-scenario frontends (Fig. 1a / 1b / split / multi-tenant)
+# ---------------------------------------------------------------------------
+
+
+def simulate_on_device(
+    lam: float,
+    service: ServiceDist,
+    k: int = 1,
+    *,
+    n: int = 100_000,
+    seed: int = 0,
+) -> SimResult:
+    """Fig. 1b: local queue -> k accelerator cores."""
+    rng = np.random.default_rng(seed)
+    arr = poisson_arrivals(lam, n, rng)
+    return simulate_tandem(arr, [(service, k)], rng)
+
+
+def _nic(mean_s: float, deterministic: bool) -> ServiceDist:
+    return Deterministic(mean_s) if deterministic else Exponential(mean_s)
+
+
+def simulate_offload(
+    lam: float,
+    edge_service: ServiceDist,
+    k_edge: int,
+    *,
+    bandwidth_Bps: float,
+    req_bytes: float,
+    res_bytes: float,
+    n: int = 100_000,
+    seed: int = 0,
+    deterministic_nic: bool = False,
+) -> SimResult:
+    """Fig. 1a: device NIC -> edge processing -> edge NIC (return path).
+
+    NIC service is exponential with mean D/B by default, matching the paper's
+    M/M/1 NIC model; ``deterministic_nic=True`` gives constant transmission
+    (used to quantify that modelling choice in benchmarks).
+    """
+    rng = np.random.default_rng(seed)
+    arr = poisson_arrivals(lam, n, rng)
+    stages = [
+        (_nic(req_bytes / bandwidth_Bps, deterministic_nic), 1),
+        (edge_service, k_edge),
+        (_nic(res_bytes / bandwidth_Bps, deterministic_nic), 1),
+    ]
+    return simulate_tandem(arr, stages, rng)
+
+
+def simulate_split(
+    lam: float,
+    dev_service: ServiceDist,
+    edge_service: ServiceDist,
+    *,
+    k_dev: int = 1,
+    k_edge: int = 1,
+    bandwidth_Bps: float,
+    inter_bytes: float,
+    res_bytes: float,
+    n: int = 100_000,
+    seed: int = 0,
+) -> SimResult:
+    """Collaborative processing: partial device -> ship D_inter -> edge -> return."""
+    rng = np.random.default_rng(seed)
+    arr = poisson_arrivals(lam, n, rng)
+    stages: list[tuple[ServiceDist, int]] = []
+    if dev_service.mean > 0:
+        stages.append((dev_service, k_dev))
+    if inter_bytes > 0:
+        stages.append((Exponential(inter_bytes / bandwidth_Bps), 1))
+    if edge_service.mean > 0:
+        stages.append((edge_service, k_edge))
+        stages.append((Exponential(res_bytes / bandwidth_Bps), 1))
+    return simulate_tandem(arr, stages, rng)
+
+
+def simulate_multitenant_offload(
+    streams: Sequence[tuple[float, ServiceDist]],
+    k_edge: int,
+    *,
+    bandwidth_Bps: float,
+    req_bytes: float,
+    res_bytes: float,
+    observe_stream: int = 0,
+    n_per_stream: int = 20_000,
+    seed: int = 0,
+) -> SimResult:
+    """m devices offloading to one shared edge (paper §3.4 figure).
+
+    Each stream i has its own Poisson(lambda_i) arrivals and its own device
+    NIC; the edge processing station is shared (no isolation); the edge NIC
+    return path carries all completions. Latencies are reported for
+    ``observe_stream`` (plus all streams via stream_ids).
+    """
+    rng = np.random.default_rng(seed)
+    per_stream_after_nic: list[np.ndarray] = []
+    arrivals_per_stream: list[np.ndarray] = []
+    for lam, _dist in streams:
+        arr = poisson_arrivals(lam, n_per_stream, rng)
+        arrivals_per_stream.append(arr)
+        nic = Exponential(req_bytes / bandwidth_Bps)
+        dep = station_pass(arr, nic.sample(len(arr), rng), 1)
+        per_stream_after_nic.append(dep)
+
+    # merge at the shared edge queue, FCFS by arrival there
+    sid = np.concatenate(
+        [np.full(len(a), i) for i, a in enumerate(per_stream_after_nic)]
+    )
+    jid = np.concatenate([np.arange(len(a)) for a in per_stream_after_nic])
+    t = np.concatenate(per_stream_after_nic)
+    perm = np.argsort(t, kind="stable")
+    t, sid, jid = t[perm], sid[perm], jid[perm]
+
+    services = np.empty(len(t), dtype=np.float64)
+    for i, (_lam, dist) in enumerate(streams):
+        mask = sid == i
+        services[mask] = dist.sample(int(mask.sum()), rng)
+    dep = station_pass(t, services, k_edge)
+
+    # shared return NIC
+    perm2 = np.argsort(dep, kind="stable")
+    dep, sid, jid = dep[perm2], sid[perm2], jid[perm2]
+    nic_out = Exponential(res_bytes / bandwidth_Bps)
+    out = station_pass(dep, nic_out.sample(len(dep), rng), 1)
+
+    starts = np.concatenate(arrivals_per_stream)
+    # map (sid, jid) back to original arrival time
+    offsets = np.cumsum([0] + [len(a) for a in arrivals_per_stream[:-1]])
+    orig_arrival = starts[offsets[sid] + jid]
+    latency = out - orig_arrival
+    # order results by original arrival time for warmup trimming
+    perm3 = np.argsort(orig_arrival, kind="stable")
+    return SimResult(
+        latencies=latency[perm3],
+        arrivals=orig_arrival[perm3],
+        stream_ids=sid[perm3],
+    )

@@ -1,0 +1,95 @@
+"""Deterministic synthetic data pipeline.
+
+Produces next-token-prediction batches (tokens / targets / loss_mask, plus
+stub prefix/encoder embeddings for the VLM/audio architectures) from a
+seeded, *stateless* sequence generator: batch ``i`` is a pure function of
+(seed, i), so a restarted job resumes data exactly where the checkpoint left
+off by storing only the step counter — no iterator state to snapshot.
+
+The token stream is a mixture of Zipfian unigrams and short repeated motifs,
+giving the model non-trivial structure to fit (smoke-train losses drop well
+below the uniform entropy floor).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["DataConfig", "SyntheticLM", "make_batch"]
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    batch: int
+    seq_len: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    motif_len: int = 8
+    motif_prob: float = 0.5
+
+
+class SyntheticLM:
+    """Stateless batch source: __getitem__(step) -> batch dict."""
+
+    def __init__(self, cfg: ModelConfig, data: DataConfig):
+        self.cfg = cfg
+        self.data = data
+        v = cfg.vocab_size
+        rng = np.random.default_rng(data.seed)
+        # fixed Zipf unigram table + motif bank (generation-time constants)
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        p = ranks ** (-data.zipf_a)
+        self._probs = jnp.asarray(p / p.sum(), jnp.float32)
+        self._motifs = jnp.asarray(
+            rng.integers(0, v, size=(64, data.motif_len)), jnp.int32
+        )
+
+    def _tokens(self, key: jax.Array, batch: int, seq: int) -> jax.Array:
+        ku, km, kw = jax.random.split(key, 3)
+        uni = jax.random.choice(
+            ku, self.cfg.vocab_size, shape=(batch, seq), p=self._probs
+        )
+        # overlay repeated motifs: position t copies motif[t % M] with prob q
+        midx = jax.random.randint(km, (batch,), 0, self._motifs.shape[0])
+        motif = self._motifs[midx]  # (batch, M)
+        tiled = jnp.tile(motif, (1, seq // self.data.motif_len + 1))[:, :seq]
+        use = jax.random.bernoulli(kw, self.data.motif_prob, (batch, 1))
+        return jnp.where(use, tiled, uni).astype(jnp.int32)
+
+    def __getitem__(self, step: int) -> dict:
+        cfg, d = self.cfg, self.data
+        key = jax.random.fold_in(jax.random.PRNGKey(d.seed), step)
+        S = d.seq_len
+        P = 0
+        batch: dict = {}
+        if cfg.is_encdec:
+            ke, kt = jax.random.split(key)
+            batch["enc_embeds"] = (
+                jax.random.normal(ke, (d.batch, S, cfg.d_model)) * 0.02
+            ).astype(jnp.dtype(cfg.dtype))
+            key = kt
+        elif cfg.prefix_embed:
+            P = int(S * cfg.prefix_len_fraction)
+            ke, kt = jax.random.split(key)
+            batch["prefix_embeds"] = (
+                jax.random.normal(ke, (d.batch, P, cfg.d_model)) * 0.02
+            ).astype(jnp.dtype(cfg.dtype))
+            key = kt
+        text = S - P
+        tokens = self._tokens(key, d.batch, text)
+        batch["tokens"] = tokens
+        batch["targets"] = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones((d.batch, text), jnp.float32).at[:, -1].set(0.0)
+        batch["loss_mask"] = mask
+        return batch
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, step: int = 0, seed: int = 0) -> dict:
+    """One-shot convenience for tests/examples."""
+    return SyntheticLM(cfg, DataConfig(batch=batch, seq_len=seq, seed=seed))[step]

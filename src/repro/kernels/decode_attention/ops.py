@@ -1,0 +1,37 @@
+"""jit'd wrapper for the decode-attention kernel (model layout adapters)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_pallas
+from .ref import decode_attention_reference
+
+__all__ = ["decode_attention"]
+
+
+@partial(jax.jit, static_argnames=("softcap", "impl", "blk_k"))
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd) — model layout (single decode token)
+    k_cache: jax.Array,  # (B, S, K, hd)
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    softcap: float = 0.0,
+    impl: str = "pallas",
+    blk_k: int = 512,
+) -> jax.Array:
+    qt = q[:, 0]  # (B, H, hd)
+    kt = jnp.swapaxes(k_cache, 1, 2)  # (B, K, S, hd)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    if impl == "xla":
+        out = decode_attention_reference(qt, kt, vt, pos, softcap=softcap)
+    else:
+        out = decode_attention_pallas(
+            qt, kt, vt, pos, softcap=softcap, blk_k=blk_k,
+            interpret=(impl == "interpret"),
+        )
+    return out[:, None]  # (B, 1, H, hd)

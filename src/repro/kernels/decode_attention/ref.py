@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for GQA decode attention (one token vs a KV cache)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_reference"]
+
+NEG_INF = -2.0e38
+
+
+def decode_attention_reference(
+    q: jax.Array,  # (B, H, hd) — the new token's queries
+    k: jax.Array,  # (B, K, S, hd) — cache (may contain garbage past `pos`)
+    v: jax.Array,
+    pos: jax.Array | int,  # attend to cache positions <= pos
+    *,
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    B, H, hd = q.shape
+    K, S = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd**-0.5 if scale is None else scale
+    qr = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bksh->bkgs", qr, k, preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", p.astype(v.dtype), v)
+    return out.reshape(B, H, hd)

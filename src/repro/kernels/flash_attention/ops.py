@@ -1,0 +1,51 @@
+"""jit'd wrapper for the flash-attention Pallas kernel.
+
+``flash_attention(q, k, v, ...)`` accepts the model's (B, S, H, hd) layout,
+transposes to the kernel's head-major layout, dispatches to the Pallas kernel
+(TPU) or the reference (CPU / interpret validation), and transposes back.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import flash_attention_reference
+
+__all__ = ["flash_attention"]
+
+
+@partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "impl", "blk_q", "blk_k"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd) — model layout
+    k: jax.Array,  # (B, Skv, K, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    impl: str = "pallas",  # "pallas" | "interpret" | "xla"
+    blk_q: int = 128,
+    blk_k: int = 128,
+) -> jax.Array:
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if impl == "xla":
+        out = flash_attention_reference(
+            qt, kt, vt, causal=causal, window=window, softcap=softcap
+        )
+    else:
+        out = flash_attention_pallas(
+            qt, kt, vt,
+            causal=causal, window=window, softcap=softcap,
+            blk_q=blk_q, blk_k=blk_k,
+            interpret=(impl == "interpret"),
+        )
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Semantics: GQA scaled-dot-product attention over head-major layouts with
+optional causal masking, sliding window, and gemma2-style score soft-capping.
+Unchunked: materialises the full score matrix (the thing the kernel avoids).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_reference"]
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_reference(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, K, Skv, hd)
+    v: jax.Array,  # (B, K, Skv, hd)
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 = unbounded
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    scale = hd**-0.5 if scale is None else scale
+    qr = q.reshape(B, K, G, Sq, hd)
+    scores = jnp.einsum(
+        "bkgqh,bksh->bkgqs", qr, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    q_pos = jnp.arange(Sq) + (k.shape[2] - Sq)
+    k_pos = jnp.arange(k.shape[2])
+    mask = jnp.ones((Sq, k.shape[2]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", p.astype(v.dtype), v)
+    return out.reshape(B, H, Sq, hd)

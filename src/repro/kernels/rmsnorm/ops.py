@@ -1,0 +1,19 @@
+"""jit'd wrapper for fused RMSNorm."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import rmsnorm_reference
+from .rmsnorm import rmsnorm_pallas
+
+__all__ = ["rmsnorm"]
+
+
+@partial(jax.jit, static_argnames=("eps", "impl", "blk_rows"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, impl: str = "pallas", blk_rows: int = 256):
+    if impl == "xla":
+        return rmsnorm_reference(x, scale, eps)
+    return rmsnorm_pallas(x, scale, eps, blk_rows=blk_rows, interpret=(impl == "interpret"))

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the selective-scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ref import ssm_scan_reference
+from .ssm_scan import ssm_scan_pallas
+
+__all__ = ["ssm_scan"]
+
+
+@partial(jax.jit, static_argnames=("impl", "blk_t", "blk_d"))
+def ssm_scan(dt, Bc, Cc, u, A, *, impl: str = "pallas", blk_t: int = 256, blk_d: int = 512):
+    """y = selective_scan(dt, B, C, u; A). Shapes as in ref.py."""
+    if impl == "xla":
+        y, _ = ssm_scan_reference(dt, Bc, Cc, u, A)
+        return y
+    return ssm_scan_pallas(
+        dt, Bc, Cc, u, A, blk_t=blk_t, blk_d=blk_d, interpret=(impl == "interpret")
+    )

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the selective-scan (Mamba S6) kernel.
+
+h_t = exp(dt_t * A) * h_{t-1} + (dt_t * u_t) * B_t ;  y_t = <h_t, C_t>
+per independent channel d with state width n. Matches models/ssm._ssm_core.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssm_scan_reference"]
+
+
+def ssm_scan_reference(
+    dt: jax.Array,  # (B, T, D)
+    Bc: jax.Array,  # (B, T, N)
+    Cc: jax.Array,  # (B, T, N)
+    u: jax.Array,  # (B, T, D)
+    A: jax.Array,  # (D, N), negative real
+    h0: jax.Array | None = None,  # (B, D, N) fp32
+):
+    """Returns (y (B, T, D) in u.dtype, h_final (B, D, N) fp32)."""
+    B, T, D = u.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+
+    def step(h, xs):
+        dt_t, B_t, C_t, u_t = xs
+        dtf = dt_t.astype(jnp.float32)
+        decay = jnp.exp(dtf[..., None] * A[None].astype(jnp.float32))
+        inp = (dtf * u_t.astype(jnp.float32))[..., None] * B_t.astype(jnp.float32)[:, None, :]
+        h = decay * h + inp
+        y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+        return h, y.astype(u_t.dtype)
+
+    tm = lambda t: jnp.swapaxes(t, 0, 1)
+    h_final, y = jax.lax.scan(step, h0, (tm(dt), tm(Bc), tm(Cc), tm(u)))
+    return jnp.swapaxes(y, 0, 1), h_final

@@ -1,0 +1,182 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell, ``jax.jit(step).lower(**specs)``
+then ``.compile()`` against the production meshes — 16x16 single-pod and
+2x16x16 multi-pod. Success proves the sharding annotations, collective
+schedule, and per-device memory are consistent; failures here are bugs in the
+framework, not in XLA.
+
+The XLA_FLAGS line above MUST precede every other import (jax locks the
+device count at first init) — that is why it is the first statement in the
+module, and why this env var is set nowhere else (smoke tests and benchmarks
+see the real single-CPU device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2_15b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, shape_cells
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import cell_step_and_specs, shardings_for
+from repro.perf.hlo import parse_collectives
+from repro.sharding.partition import rules_for_cell, use_rules
+
+__all__ = ["run_cell", "main"]
+
+
+def _mem_fields(mem) -> dict:
+    out = {}
+    for f in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(mem, f, None)
+        if v is not None:
+            out[f] = int(v)
+    return out
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    scan_layers: bool = True,
+    donate: bool = True,
+    overrides: dict | None = None,
+    verbose: bool = True,
+) -> dict:
+    """Lower + compile one cell; return the dry-run record."""
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    if not scan_layers:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, scan_layers=False, unroll_attn_chunks=True)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    rules = rules_for_cell(cfg, shape, mesh)
+
+    t0 = time.time()
+    with use_rules(rules):
+        cell = cell_step_and_specs(cfg, shape, zero_size=mesh.shape.get("data", 1))
+        arg_names = list(cell.specs.keys())
+        args = tuple(cell.specs[k] for k in arg_names)
+        in_shardings = tuple(shardings_for(cell.axes[k], rules) for k in arg_names)
+        donate_argnums = ()
+        if donate:
+            if cell.kind == "train":
+                donate_argnums = (0, 1)  # params, opt_state
+            elif cell.kind == "decode":
+                donate_argnums = (3,)  # caches
+        jitted = jax.jit(
+            cell.step, in_shardings=in_shardings, donate_argnums=donate_argnums
+        )
+        with mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        coll = parse_collectives(compiled.as_text())
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": int(mesh.size),
+        "kind": cell.kind,
+        "scan_layers": cfg.scan_layers,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", 0.0)),
+        "memory_analysis": _mem_fields(mem),
+        "collectives": coll.summary(),
+    }
+    if verbose:
+        ma = record["memory_analysis"]
+        print(
+            f"[dryrun] {arch:24s} {shape_name:12s} {mesh_name:6s} OK  "
+            f"compile={record['compile_s']:7.1f}s  "
+            f"args={ma.get('argument_size_in_bytes', 0)/2**30:7.2f}GiB  "
+            f"temp={ma.get('temp_size_in_bytes', 0)/2**30:7.2f}GiB  "
+            f"colls={sum(record['collectives']['counts'].values())}"
+        )
+        print(f"  memory_analysis: {ma}")
+        print(f"  cost_analysis: flops={record['flops_per_device']:.3e} "
+              f"bytes={record['bytes_accessed_per_device']:.3e} (per device)")
+    return record
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="every (arch x shape) cell")
+    ap.add_argument("--out", type=str, default=None, help="directory for JSON records")
+    ap.add_argument("--no-scan", action="store_true", help="unrolled (roofline accounting)")
+    args = ap.parse_args(argv)
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for sh in shape_cells(cfg):
+                cells.append((arch, sh.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    outdir = Path(args.out) if args.out else None
+    if outdir:
+        outdir.mkdir(parents=True, exist_ok=True)
+
+    failures = []
+    for arch, shape_name in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+            try:
+                rec = run_cell(arch, shape_name, multi_pod=multi, scan_layers=not args.no_scan)
+                if outdir:
+                    (outdir / f"{tag}.json").write_text(json.dumps(rec, indent=2))
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[dryrun] {tag} FAILED: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err}")
+        return 1
+    print(f"\nall {len(cells) * len(meshes)} dry-run cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

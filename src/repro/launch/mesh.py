@@ -1,0 +1,51 @@
+"""Production meshes + elastic re-meshing.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). Single pod: 16x16 = 256 v5e chips, axes (data, model).
+Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model); the "pod" axis is
+the DCN dimension — gradient reduction crosses it, everything else stays
+within a pod.
+
+``elastic_mesh`` supports the fault-tolerance story (DESIGN.md §7): when
+hosts drop, recompute the largest valid mesh from the devices that remain and
+resume from checkpoint (training/train_loop.py re-shards the restored state).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "elastic_mesh", "data_axis_size", "mesh_axis"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def elastic_mesh(n_available: int, *, model_parallel: int = 16) -> jax.sharding.Mesh:
+    """Largest (data, model) mesh from n_available devices.
+
+    Keeps model-parallel width fixed (param shardings stay valid) and shrinks
+    the data axis to the largest count that fits — dropping to the next power
+    of two so batch re-sharding stays divisible. Raises if fewer than one
+    model-parallel group survives.
+    """
+    if n_available < model_parallel:
+        raise ValueError(
+            f"{n_available} devices cannot host model_parallel={model_parallel}"
+        )
+    data = 1 << int(math.log2(n_available // model_parallel))
+    return jax.make_mesh((data, model_parallel), ("data", "model"))
+
+
+def data_axis_size(mesh: jax.sharding.Mesh) -> int:
+    size = mesh.shape.get("data", 1)
+    return int(size)
+
+
+def mesh_axis(mesh: jax.sharding.Mesh, name: str) -> int:
+    return int(mesh.shape.get(name, 1))

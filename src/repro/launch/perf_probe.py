@@ -1,0 +1,80 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb instrumentation: per-layer vs fixed cost breakdown of a cell.
+
+Compiles the unrolled 1- and 2-superblock probes (same machinery as the
+roofline runner) and reports base (embedding/head/optimizer/fixed) vs slope
+(per-superblock) for flops / bytes / wire-bytes — the napkin-math input for
+each hypothesis->change->measure iteration in EXPERIMENTS.md §Perf.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf_probe --arch gemma2_9b --shape train_4k \
+      [--override seq_chunk=256] [--multi]
+"""
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline_run import _probe_costs
+
+__all__ = ["breakdown"]
+
+
+def breakdown(arch: str, shape_name: str, *, multi_pod: bool = False, overrides=None):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    base_ov = dict(scan_layers=False, unroll_attn_chunks=True, grad_accum=1)
+    out = {}
+    for n in (1, 2):
+        ov = dict(base_ov, num_superblocks=n)
+        if cfg.is_encdec:
+            ov["encoder_layers"] = 1
+        out[n] = _probe_costs(dataclasses.replace(cfg, **ov), shape, mesh)
+    n_sb = cfg.num_superblocks
+    rows = {}
+    for key in ("flops", "bytes", "wire_bytes"):
+        slope = out[2][key] - out[1][key]
+        base = out[1][key] - slope
+        rows[key] = {
+            "base": base,
+            "per_superblock": slope,
+            "total_extrapolated": base + n_sb * slope,
+            "base_fraction": base / max(base + n_sb * slope, 1e-30),
+        }
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--override", action="append", default=[])
+    args = ap.parse_args(argv)
+    ov = {}
+    for item in args.override:
+        k, v = item.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        ov[k] = v
+    rows = breakdown(args.arch, args.shape, multi_pod=args.multi, overrides=ov or None)
+    for key, r in rows.items():
+        print(
+            f"{key:12s} base={r['base']:.3e}  per_sb={r['per_superblock']:.3e}  "
+            f"total={r['total_extrapolated']:.3e}  base_frac={r['base_fraction']:.2f}"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

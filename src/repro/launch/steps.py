@@ -1,0 +1,252 @@
+"""Step builders + input specs: the contract between models, launchers,
+dry-run, and the serving engine.
+
+``input_specs(cfg, shape)`` returns weak-type-correct ShapeDtypeStructs for
+every input of the step that the (arch x shape) cell lowers — no device
+allocation, the same pattern the dry-run and the roofline reader consume.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSuite
+from repro.models import lm
+from repro.models.params import abstract_params, is_axes_leaf, param_axes
+from repro.sharding.partition import ShardingRules, current_rules
+from repro.training import optimizer as opt
+
+__all__ = [
+    "prefix_len",
+    "batch_specs",
+    "decode_specs",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "cell_step_and_specs",
+    "shardings_for",
+]
+
+
+def prefix_len(cfg: ModelConfig, seq_len: int) -> int:
+    if not cfg.prefix_embed or cfg.is_encdec:
+        return 0
+    return int(seq_len * cfg.prefix_len_fraction)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSuite) -> dict:
+    """Training / prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    d = jnp.dtype(cfg.dtype)
+    if cfg.is_encdec:
+        return {
+            "enc_embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), d),
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "targets": jax.ShapeDtypeStruct((B, S), i32),
+            "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+    P = prefix_len(cfg, S)
+    text = S - P
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, text), i32),
+        "targets": jax.ShapeDtypeStruct((B, text), i32),
+        "loss_mask": jax.ShapeDtypeStruct((B, text), jnp.float32),
+    }
+    if P:
+        out["prefix_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), d)
+    return out
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeSuite) -> dict:
+    ax2 = ("batch", None)
+    out = {k: ax2 for k in ("tokens", "targets", "loss_mask")}
+    if cfg.is_encdec:
+        out["enc_embeds"] = ("batch", None, None)
+    elif prefix_len(cfg, shape.seq_len):
+        out["prefix_embeds"] = ("batch", None, None)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSuite) -> dict:
+    """Decode-step inputs: one new token + caches holding ``seq_len`` context."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = abstract_params(
+        lm.cache_template(cfg, B, S, enc_len=S if cfg.is_encdec else 0),
+        jnp.dtype(cfg.dtype),
+    )
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": caches,
+    }
+
+
+def decode_axes(cfg: ModelConfig, shape: ShapeSuite) -> dict:
+    cache_ax = param_axes(lm.cache_template(cfg, shape.global_batch, shape.seq_len,
+                                            enc_len=shape.seq_len if cfg.is_encdec else 0))
+    return {"token": ("batch", None), "pos": (), "caches": cache_ax}
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, ocfg=None) -> Callable:
+    if ocfg is None:
+        ocfg = (
+            opt.AdafactorConfig() if cfg.optimizer == "adafactor" else opt.AdamWConfig()
+        )
+    is_adafactor = isinstance(ocfg, opt.AdafactorConfig)
+
+    def compute_grads(params, batch):
+        A = max(1, cfg.grad_accum)
+        if A == 1:
+            (loss, metrics), grads = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+                params, cfg, batch
+            )
+            gd = jnp.dtype(cfg.grad_dtype)
+            return loss, metrics, jax.tree.map(lambda g: g.astype(gd), grads)
+
+        # gradient accumulation: scan over A microbatches, fp32 accumulator
+        def split(x):
+            return x.reshape(A, x.shape[0] // A, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def micro(carry, mb):
+            loss_sum, tok_sum, acc = carry
+            (loss, metrics), g = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+                params, cfg, mb
+            )
+            acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+            return (loss_sum + loss, tok_sum + metrics["tokens"], acc), None
+
+        gd = jnp.dtype(cfg.grad_dtype)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, gd), params)
+        (loss_sum, tok_sum, grads), _ = jax.lax.scan(
+            micro, (jnp.float32(0.0), jnp.float32(0.0), zeros), mbs
+        )
+        loss = loss_sum / A
+        grads = jax.tree.map(lambda g: g / A, grads)
+        return loss, {"loss": loss, "nll": loss, "tokens": tok_sum}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        if not is_adafactor and ocfg.compress:
+            q, scales, new_err = opt.compress_grads(grads, opt_state.get("ef"))
+            grads = opt.decompress_grads(q, scales)
+        if is_adafactor:
+            new_params, new_state, om = opt.adafactor_update(ocfg, grads, opt_state, params)
+        else:
+            new_params, new_state, om = opt.adamw_update(ocfg, grads, opt_state, params)
+            if ocfg.compress:
+                new_state["ef"] = new_err
+        metrics = dict(metrics, **om)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches = lm.prefill(
+            params, cfg, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+        )
+        return logits, caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_fn(params, token, pos, caches):
+        return lm.decode_step(params, cfg, token, pos, caches)
+
+    return decode_fn
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly: (step fn, kwargs-specs, logical-axes) for one (arch x shape)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Cell:
+    step: Callable
+    specs: dict  # kwargs of ShapeDtypeStructs
+    axes: dict  # matching logical axes
+    kind: str
+
+
+def cell_step_and_specs(cfg: ModelConfig, shape: ShapeSuite, *, zero_size: int = 0) -> Cell:
+    p_abs = lm.abstract_model(cfg)
+    p_axes = lm.model_param_axes(cfg)
+    if shape.kind == "train":
+        rules = current_rules()
+
+        def _uses_data(v) -> bool:
+            return v == "data" or (isinstance(v, tuple) and "data" in v)
+
+        if rules is not None:
+            replicated = frozenset(k for k, v in rules.rules.items() if v is None)
+            data_resident = frozenset(
+                k for k, v in rules.rules.items() if _uses_data(v)
+            )
+        else:
+            replicated = frozenset({"embed"})
+            data_resident = frozenset({"expert_ff", "zero"})
+        if cfg.optimizer == "adafactor":
+            ostate = opt.abstract_adafactor_state(p_abs)
+            oaxes = opt.adafactor_axes(p_axes, p_abs)
+        else:
+            ostate = opt.abstract_adamw_state(p_abs)
+            oaxes = opt.opt_axes(
+                p_axes, p_abs, zero_size=zero_size,
+                replicated_names=replicated, data_resident_names=data_resident,
+            )
+        return Cell(
+            step=make_train_step(cfg),
+            specs={"params": p_abs, "opt_state": ostate, "batch": batch_specs(cfg, shape)},
+            axes={"params": p_axes, "opt_state": oaxes, "batch": batch_axes(cfg, shape)},
+            kind="train",
+        )
+    if shape.kind == "prefill":
+        return Cell(
+            step=make_prefill_step(cfg),
+            specs={"params": p_abs, "batch": batch_specs(cfg, shape)},
+            axes={"params": p_axes, "batch": batch_axes(cfg, shape)},
+            kind="prefill",
+        )
+    if shape.kind == "decode":
+        d = decode_specs(cfg, shape)
+        da = decode_axes(cfg, shape)
+        return Cell(
+            step=make_decode_step(cfg),
+            specs={"params": p_abs, "token": d["token"], "pos": d["pos"], "caches": d["caches"]},
+            axes={"params": p_axes, "token": da["token"], "pos": da["pos"], "caches": da["caches"]},
+            kind="decode",
+        )
+    raise ValueError(shape.kind)
+
+
+def shardings_for(axes_tree: Any, rules: ShardingRules):
+    """Logical axes tree -> NamedSharding tree (leaves matched by is_axes_leaf)."""
+    from jax.sharding import NamedSharding
+
+    def f(ax):
+        return NamedSharding(rules.mesh, rules.spec(tuple(ax)))
+
+    return jax.tree.map(f, axes_tree, is_leaf=is_axes_leaf)

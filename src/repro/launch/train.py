@@ -1,0 +1,61 @@
+"""Training launcher CLI.
+
+Single-host (CPU-testable) entry point over repro.training.Trainer with
+checkpoint/resume and elastic re-mesh hooks. On a real TPU deployment the
+same module runs per host under `jax.distributed.initialize()`; the mesh
+comes from launch.mesh and the restored checkpoint re-shards automatically
+(checkpoint/checkpointer.py is mesh-agnostic).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2_3b --tiny \
+      --steps 50 --ckpt-dir /tmp/run1
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2_3b --tiny --resume \
+      --steps 100 --ckpt-dir /tmp/run1      # continues from the checkpoint
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.training.train_loop import TrainConfig, Trainer
+
+__all__ = ["main"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--tiny", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.tiny:
+        cfg = cfg.reduced()
+    tc = TrainConfig(
+        steps=args.steps, batch=args.batch, seq_len=args.seq_len,
+        checkpoint_every=args.ckpt_every, checkpoint_dir=args.ckpt_dir,
+        lr=args.lr, seed=args.seed,
+    )
+    trainer = Trainer(cfg, tc)
+    if args.resume:
+        params, state, step = trainer.resume()
+        print(f"[train] resumed {args.arch} at step {step}")
+        trainer.run(params, state, start_step=step)
+    else:
+        trainer.run()
+    last = trainer.metrics_log[-1]
+    print(f"[train] done: step {last['step']} loss {last['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

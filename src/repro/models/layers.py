@@ -1,0 +1,116 @@
+"""Shared layer primitives: RMSNorm, RoPE, MLP, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partition import hint
+
+from .params import TSpec
+
+__all__ = [
+    "rms_norm",
+    "rope_apply",
+    "mlp_template",
+    "mlp_apply",
+    "norm_template",
+    "embed_template",
+    "softcap",
+]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm in fp32 ([arXiv:1910.07467]); (1+scale) parameterisation
+    (gemma-style, zero-init-friendly)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def norm_template(d: int) -> TSpec:
+    return TSpec((d,), ("embed",), init="zeros")
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_apply(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding ([arXiv:2104.09864], llama rotate-half convention).
+
+    x: (B, S, H, hd); positions: (S,) or (B, S) absolute token positions.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)  # (half,)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+        ang = ang[None, :, None, :]  # (1, S, 1, half)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+        ang = ang[:, :, None, :]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (plain or gated GLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_template(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    t = {
+        "wi": TSpec((d, f), ("embed", "ff"), init="fan_in"),
+        "wo": TSpec((f, d), ("ff", "embed"), init="fan_in"),
+    }
+    if cfg.gated_mlp:
+        t["wg"] = TSpec((d, f), ("embed", "ff"), init="fan_in")
+    return t
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = _act(cfg.mlp_act)
+    h = x @ p["wi"]
+    h = hint(h, "batch", "seq_inner", "ff")
+    if cfg.gated_mlp:
+        h = act(x @ p["wg"]) * h
+    else:
+        h = act(h)
+    out = h @ p["wo"]
+    return hint(out, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / head
+# ---------------------------------------------------------------------------
+
+
+def embed_template(cfg: ModelConfig) -> dict:
+    v = cfg.padded_vocab  # shard-friendly padding; ids stay < vocab_size
+    t = {"embedding": TSpec((v, cfg.d_model), ("vocab", "embed"), std=0.02)}
+    if not cfg.tie_embeddings:
+        t["unembed"] = TSpec((cfg.d_model, v), ("embed", "vocab"), init="fan_in")
+    return t

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts: GShard-style top-k token-choice routing with capacity.
+
+Dense one-hot dispatch/combine einsums ([arXiv:2006.16668]); experts shard
+over the "expert" logical axis (expert parallelism -> all-to-all under GSPMD)
+and each expert's hidden dim over "expert_ff" (so 480B-class expert stacks fit
+per-device HBM; DESIGN.md §6). Tokens are split into dispatch groups of
+``moe_group_size`` so the (group, E, capacity) one-hot stays bounded.
+
+Variants:
+  "moe"       — routed experts only (dbrx, jamba)
+  "moe_dense" — routed experts + parallel dense residual MLP (arctic)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partition import hint
+
+from .layers import _act, mlp_apply, mlp_template
+from .params import TSpec
+
+__all__ = ["moe_template", "moe_apply", "capacity"]
+
+
+def moe_template(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    t = {
+        "router": TSpec((d, e), ("embed", "expert"), init="fan_in"),
+        "wi": TSpec((e, d, f), ("expert", "embed", "expert_ff"), init="fan_in"),
+        "wg": TSpec((e, d, f), ("expert", "embed", "expert_ff"), init="fan_in"),
+        "wo": TSpec((e, f, d), ("expert", "expert_ff", "embed"), init="fan_in"),
+    }
+    return t
+
+
+def _largest_divisor(n: int, upper: int) -> int:
+    """Largest divisor of n that is <= upper (group tokens exactly)."""
+    for s in range(upper, 0, -1):
+        if n % s == 0:
+            return s
+    return 1
+
+
+def capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    """Per-group per-expert capacity C = ceil(k * s * cf / E), MXU-aligned."""
+    c = math.ceil(
+        cfg.num_experts_per_tok * group_tokens * cfg.capacity_factor / cfg.num_experts
+    )
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). Routed top-k with capacity dropping."""
+    B, S, d = x.shape
+    E, topk = cfg.num_experts, cfg.num_experts_per_tok
+    n = B * S
+    s = _largest_divisor(n, min(cfg.moe_group_size, n))
+    g = n // s
+    C = capacity(cfg, s)
+
+    xt = x.reshape(g, s, d)
+    logits = jnp.einsum("gsd,de->gse", xt, p["router"], preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, topk)  # (g, s, topk)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )  # renormalise over the chosen k
+
+    # position of each (token, slot) inside its expert's buffer
+    onehot_e = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # (g, s, topk, E)
+    flat = onehot_e.reshape(g, s * topk, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (g, s*topk, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1)  # (g, s*topk)
+    keep = (pos < C).reshape(g, s, topk)
+    pos = pos.reshape(g, s, topk)
+    # Build dispatch/combine per k-slot, accumulating in the model dtype: the
+    # (g, s, E, C) one-hot products are the layer's biggest tensors and fp32
+    # materialisation of the (g, s*topk, E, C) variant costs 4x the memory.
+    disp = jnp.zeros((g, s, E, C), x.dtype)
+    comb = jnp.zeros((g, s, E, C), x.dtype)
+    for kk in range(topk):
+        oe = (onehot_e[:, :, kk] * keep[:, :, kk, None]).astype(x.dtype)  # (g,s,E)
+        oc = jax.nn.one_hot(pos[:, :, kk].astype(jnp.int32), C, dtype=x.dtype)
+        slot = jnp.einsum("gse,gsc->gsec", oe, oc)
+        disp = disp + slot
+        comb = comb + slot * gate_vals[:, :, kk, None, None].astype(x.dtype)
+    disp = hint(disp, "batch", None, "expert", None)
+    comb = hint(comb, "batch", None, "expert", None)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", disp, xt)
+    expert_in = hint(expert_in, "expert", "batch", None, None)
+    act = _act(cfg.mlp_act)
+    h = jnp.einsum("egcd,edf->egcf", expert_in, p["wi"])
+    h = act(jnp.einsum("egcd,edf->egcf", expert_in, p["wg"])) * h
+    h = hint(h, "expert", "batch", None, None)
+    expert_out = jnp.einsum("egcf,efd->egcd", h, p["wo"])
+    out = jnp.einsum("gsec,egcd->gsd", comb, expert_out)
+    return out.reshape(B, S, d)
+
+
+def router_aux_loss(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch [arXiv:2101.03961] style)."""
+    B, S, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x, p["router"], preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    counts = jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.float32).sum(axis=(0, 1, 2))
+    frac_tokens = counts / jnp.maximum(counts.sum(), 1.0)
+    frac_probs = probs.mean(axis=(0, 1))
+    return cfg.num_experts * jnp.sum(frac_tokens * frac_probs)

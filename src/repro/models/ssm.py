@@ -1,0 +1,150 @@
+"""Mamba (S6) selective-state-space mixer [arXiv:2312.00752], TPU-adapted.
+
+The recurrence h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t is evaluated with a
+``lax.scan`` over time carrying h (B, d_inner, d_state); all projections
+(in/x/dt/out) are batched matmuls outside the scan, so MXU work dominates and
+the scan body is elementwise. The Pallas kernel in repro.kernels.ssm_scan is
+the TPU hot path (keeps h resident in VMEM across the sequence — DESIGN.md §5).
+
+Decode carries (conv_state, h) as the layer's cache: O(1) per token, which is
+why jamba runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.partition import hint
+
+from .params import TSpec
+
+__all__ = ["mamba_template", "mamba_cache_template", "mamba_forward", "mamba_decode"]
+
+
+MAMBA_CHUNK = 128  # outer-scan chunk (state checkpointed at boundaries)
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return math.ceil(cfg.d_model / 16)
+
+
+def mamba_template(cfg: ModelConfig) -> dict:
+    d, di, n = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr, dc = _dt_rank(cfg), cfg.mamba_d_conv
+    return {
+        "in_proj": TSpec((d, 2 * di), ("embed", "ff"), init="fan_in"),
+        "conv_w": TSpec((dc, di), (None, "ff"), init="normal", std=0.1),
+        "conv_b": TSpec((di,), ("ff",), init="zeros"),
+        "x_proj": TSpec((di, dtr + 2 * n), ("ff", None), init="fan_in"),
+        "dt_proj": TSpec((dtr, di), (None, "ff"), init="fan_in"),
+        "dt_bias": TSpec((di,), ("ff",), init="zeros"),
+        "A_log": TSpec((di, n), ("ff", None), init="ones"),
+        "D": TSpec((di,), ("ff",), init="ones"),
+        "out_proj": TSpec((di, d), ("ff", "embed"), init="fan_in"),
+    }
+
+
+def mamba_cache_template(cfg: ModelConfig, batch: int) -> dict:
+    di, n, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "conv": TSpec((batch, dc - 1, di), ("cache_batch", None, "ff"), init="zeros"),
+        "h": TSpec((batch, di, n), ("cache_batch", "ff", None), init="zeros", dtype="float32"),
+    }
+
+
+def _ssm_inputs(p: dict, x: jax.Array, cfg: ModelConfig):
+    """Shared projections: returns (u, z, dt, Bc, Cc, A) with u post-conv-input."""
+    di, n = cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr = _dt_rank(cfg)
+    xz = x @ p["in_proj"]
+    xz = hint(xz, "batch", "seq_inner", "ff")
+    u, z = jnp.split(xz, 2, axis=-1)  # (B, S, di)
+    return u, z
+
+
+def _ssm_core(p: dict, u_conv: jax.Array, cfg: ModelConfig, h0: jax.Array):
+    """Run the selective scan over u_conv (B, S, di) from initial state h0.
+    Returns (y (B,S,di), h_final (B,di,n) fp32)."""
+    di, n = cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr = _dt_rank(cfg)
+    dbc = u_conv @ p["x_proj"]  # (B, S, dtr + 2n)
+    dt_in, Bc, Cc = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"])  # (B, S, di)
+    dt = hint(dt, "batch", "seq_inner", "ff")
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, n), negative real
+
+    def step(h, xs_t):
+        dt_t, B_t, C_t, u_t = xs_t  # (B, di), (B, n), (B, n), (B, di)
+        dtf = dt_t.astype(jnp.float32)
+        decay = jnp.exp(dtf[..., None] * A[None])  # (B, di, n)
+        inp = (dtf * u_t.astype(jnp.float32))[..., None] * B_t.astype(jnp.float32)[:, None, :]
+        h = decay * h + inp
+        y_t = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+        return h, y_t.astype(u_t.dtype)
+
+    # Two-level scan: outer over chunks (h saved at chunk boundaries only),
+    # inner per-step scan rematerialised in the backward pass. A flat
+    # 4096-step scan would checkpoint the (B, di, n) state at EVERY step —
+    # tens of GB per layer; this bounds it to S/chunk boundaries + one
+    # chunk's transient (the same trick our Pallas kernel plays with VMEM).
+    S = u_conv.shape[1]
+    tc = min(MAMBA_CHUNK, S)
+    while S % tc:
+        tc -= 1
+    nc = S // tc
+
+    def to_chunks(t):  # (B, S, f) -> (nc, tc, B, f)
+        return jnp.swapaxes(t.reshape(t.shape[0], nc, tc, -1), 0, 1).swapaxes(1, 2)
+
+    xs = tuple(to_chunks(t) for t in (dt, Bc, Cc, u_conv))
+
+    def chunk_body(h, xs_chunk):
+        return jax.lax.scan(step, h, xs_chunk)
+
+    if cfg.remat != "none" and S > 1:
+        chunk_body = jax.checkpoint(chunk_body)
+    h_final, y_cm = jax.lax.scan(chunk_body, h0, xs)  # y_cm: (nc, tc, B, di)
+    y = jnp.moveaxis(y_cm.reshape(nc * tc, *y_cm.shape[2:]), 0, 1)
+    y = hint(y, "batch", "seq_inner", "ff") + u_conv * p["D"]
+    return y, h_final
+
+
+def mamba_forward(
+    p: dict, x: jax.Array, cfg: ModelConfig, *, return_cache: bool = False
+):
+    """x: (B, S, d) -> (B, S, d) [, cache]."""
+    B, S, _ = x.shape
+    di, dc = cfg.mamba_d_inner, cfg.mamba_d_conv
+    u, z = _ssm_inputs(p, x, cfg)
+    # causal depthwise conv along seq (kernel dc)
+    u_pad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+    u_conv = sum(
+        u_pad[:, i : i + S] * p["conv_w"][i][None, None, :] for i in range(dc)
+    ) + p["conv_b"]
+    u_conv = hint(jax.nn.silu(u_conv), "batch", "seq_inner", "ff")
+    h0 = jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)
+    y, h_final = _ssm_core(p, u_conv, cfg, h0)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    out = hint(out, "batch", "seq", None)
+    if not return_cache:
+        return out
+    # conv cache = last (dc-1) raw conv inputs (pre-activation), as in decode
+    cache = {"conv": u_pad[:, S : S + dc - 1, :], "h": h_final}
+    return out, cache
+
+
+def mamba_decode(p: dict, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """x: (B, 1, d); cache {conv (B, dc-1, di), h (B, di, n)} -> (y, cache)."""
+    B = x.shape[0]
+    dc = cfg.mamba_d_conv
+    u, z = _ssm_inputs(p, x, cfg)  # (B, 1, di)
+    window = jnp.concatenate([cache["conv"], u], axis=1)  # (B, dc, di)
+    u_conv = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    u_conv = jax.nn.silu(u_conv)[:, None, :]  # (B, 1, di)
+    y, h = _ssm_core(p, u_conv, cfg, cache["h"])
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"conv": window[:, 1:, :], "h": h}

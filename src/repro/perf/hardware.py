@@ -1,0 +1,41 @@
+"""Target hardware constants (TPU v5e) for roofline analysis.
+
+Values fixed by the assignment: 197 bf16 TFLOP/s per chip, 819 GB/s HBM
+bandwidth, ~50 GB/s per ICI link. Aggregate collective bandwidth is modelled
+as chips x link_bw (the assignment's "collective term" denominator).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["HardwareSpec", "TPU_V5E", "DEVICE_TIER_V5E_1", "CLIENT_NPU"]
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float  # bf16 FLOP/s per chip
+    hbm_bw: float  # bytes/s per chip
+    ici_bw: float  # bytes/s per link
+    hbm_bytes: float  # capacity per chip
+    dcn_bw: float = 25e9  # bytes/s per host, cross-pod (pod axis)
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16 * 1024**3,
+)
+
+# Tiers for the paper's device/edge instantiation (DESIGN.md §5):
+DEVICE_TIER_V5E_1 = TPU_V5E  # "device" = one v5e chip
+CLIENT_NPU = HardwareSpec(  # a phone/laptop-class NPU for benchmarks
+    name="client_npu",
+    peak_flops=10e12,
+    hbm_bw=100e9,
+    ici_bw=0.0,
+    hbm_bytes=8 * 1024**3,
+)

@@ -1,0 +1,165 @@
+"""Serving engine: batched prefill + decode with KV caches.
+
+A deliberately compact continuous-batching engine ("batching-lite"): requests
+are admitted into fixed-capacity decode slots; each engine tick runs one
+decode step for every active slot; finished sequences free their slot for the
+admission queue. Prefill runs per-request (batch=1) and writes the slot's
+cache region.
+
+The engine is the paper's "accelerator": its measured service times feed the
+queueing models, and the gateway (serving/gateway.py) applies Algorithm 1 to
+route between a device-tier engine and edge-tier engines.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+__all__ = ["Request", "ServeConfig", "Engine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    arrival_s: float = 0.0
+    # filled by the engine:
+    tokens_out: list = field(default_factory=list)
+    t_first_token: float | None = None
+    t_done: float | None = None
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.t_done is None else self.t_done - self.arrival_s
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 4  # concurrent decode slots
+    max_seq: int = 512  # cache capacity per slot
+    greedy: bool = True
+
+
+class Engine:
+    """Single-model serving engine over the lm prefill/decode steps."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig):
+        self.cfg = cfg
+        self.sc = sc
+        self.params = params
+        self._decode = jax.jit(
+            lambda p, tok, pos, caches: lm.decode_step(p, cfg, tok, pos, caches)
+        )
+        self._prefill = jax.jit(
+            lambda p, tokens: lm.prefill(p, cfg, tokens)
+        )
+        # slot state
+        B, S = sc.slots, sc.max_seq
+        self.caches = self._zero_caches(B, S)
+        self.positions = np.zeros(B, np.int32)  # next position per slot
+        self.active: list[Request | None] = [None] * B
+        self.remaining = np.zeros(B, np.int32)
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+        self.service_log: list[tuple[float, float]] = []  # (t, service seconds)
+
+    def _zero_caches(self, batch: int, seq: int):
+        from repro.models.params import abstract_params, init_params
+        from repro.models.lm import cache_template
+
+        tpl = cache_template(self.cfg, batch, seq, enc_len=seq if self.cfg.is_encdec else 0)
+        return init_params(tpl, jax.random.PRNGKey(0), jnp.dtype(self.cfg.dtype))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self, now: float) -> None:
+        for slot in range(self.sc.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            t0 = time.time()
+            prompt = jnp.asarray(req.prompt[None], jnp.int32)
+            logits, caches = self._prefill(self.params, prompt)
+            next_tok = int(jnp.argmax(logits[0, -1]))
+            # write this request's cache into the slot (batch index `slot`)
+            self.caches = jax.tree.map(
+                lambda full, one: self._write_slot(full, one, slot, len(req.prompt)),
+                self.caches,
+                caches,
+            )
+            self.positions[slot] = len(req.prompt)
+            self.remaining[slot] = req.max_new_tokens - 1
+            req.tokens_out.append(next_tok)
+            req.t_first_token = now
+            self.active[slot] = req
+            self.service_log.append((now, time.time() - t0))
+
+    @staticmethod
+    def _write_slot(full, one, slot: int, prompt_len: int):
+        """Place a single-request cache (leading batch 1) into slot `slot`.
+
+        Sequence-bearing leaves (dim2 = cache capacity) copy the prompt
+        prefix; state leaves (mamba/xLSTM) copy wholesale."""
+        if full.ndim >= 3 and one.ndim == full.ndim and full.shape[2] != one.shape[2]:
+            # kv-style cache: (n_sb, B, S_cap, ...) vs prefill (n_sb, 1, S_p, ...)
+            s = min(one.shape[2], full.shape[2])
+            return full.at[:, slot : slot + 1, :s].set(one[:, :, :s].astype(full.dtype))
+        return full.at[:, slot : slot + 1].set(one.astype(full.dtype))
+
+    # ------------------------------------------------------------------
+    def tick(self, now: float | None = None) -> int:
+        """Admit + one decode step for all active slots. Returns #active."""
+        now = time.time() if now is None else now
+        self._admit(now)
+        if not any(r is not None for r in self.active):
+            return 0
+        t0 = time.time()
+        last = np.zeros((self.sc.slots, 1), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is not None:
+                last[slot, 0] = req.tokens_out[-1]
+        pos = int(max(self.positions[s] for s, r in enumerate(self.active) if r is not None))
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(last), jnp.int32(pos), self.caches
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        dt = time.time() - t0
+        n_active = 0
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            n_active += 1
+            req.tokens_out.append(int(nxt[slot]))
+            self.positions[slot] += 1
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or self.positions[slot] >= self.sc.max_seq - 1:
+                req.t_done = now
+                self.completed.append(req)
+                self.active[slot] = None
+        self.service_log.append((now, dt))
+        return n_active
+
+    def drain(self) -> None:
+        while self.queue or any(r is not None for r in self.active):
+            self.tick()
+
+    # ------------------------------------------------------------------
+    def observed_service_stats(self) -> tuple[float, float]:
+        """(mean, var) of measured per-tick service times — the paper's
+        profiled service-time input (§4.2)."""
+        if not self.service_log:
+            return 0.0, 0.0
+        arr = np.array([s for _, s in self.service_log])
+        return float(arr.mean()), float(arr.var())

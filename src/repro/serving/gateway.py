@@ -1,0 +1,133 @@
+"""Offload gateway: the paper's Algorithm 1 embedded in the serving stack.
+
+The gateway fronts one *device-tier* engine and E *edge-tier* engines
+separated by a modelled network path. Per epoch it snapshots telemetry
+(sliding-window arrival rate, EWMA bandwidth, per-edge aggregate load +
+service moments), asks ``AdaptiveOffloadManager`` for the argmin strategy,
+and routes the epoch's requests accordingly. Service-time estimates come from
+the engines' own profiled ticks (paper §4.2) or, before any profile exists,
+from the roofline estimator (§3.2 "prediction").
+
+This is the deployable form of the paper's resource manager: the same object
+drives the Fig. 6 (network dynamics) and Fig. 7 (multi-tenant) case studies
+in benchmarks/, with the discrete-event simulator standing in for wall-clock
+engines so the studies are deterministic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.latency import NetworkPath, ServiceModel, Tier, Workload
+from repro.core.manager import ON_DEVICE, AdaptiveOffloadManager, Decision, EdgeServerState
+from repro.core.telemetry import EwmaEstimator, SlidingRateEstimator, TelemetrySnapshot, WindowedMoments
+
+__all__ = ["EdgeHandle", "OffloadGateway"]
+
+
+@dataclass
+class EdgeHandle:
+    """One edge server as the gateway tracks it."""
+
+    name: str
+    service_mean_s: float  # current estimate for THIS workload on the edge
+    parallelism_k: float = 1.0
+    background_rate: float = 0.0  # other tenants' aggregate lambda (obs.)
+    background_service_s: float = 0.0
+    background_service_var: float = 0.0
+    arrivals: SlidingRateEstimator = field(default_factory=lambda: SlidingRateEstimator(30.0))
+    service: WindowedMoments = field(default_factory=WindowedMoments)
+
+    def state(self, wl_service_mean: float | None = None) -> EdgeServerState:
+        mine = wl_service_mean if wl_service_mean is not None else self.service_mean_s
+        lam_bg = self.background_rate
+        lam_own = self.arrivals.rate() if self.arrivals else 0.0
+        lam_total = lam_bg + lam_own
+        # aggregate mixture moments across tenants (paper §3.4)
+        if lam_total > 0 and lam_bg > 0:
+            w_bg = lam_bg / lam_total
+            mean = w_bg * self.background_service_s + (1 - w_bg) * mine
+            second = w_bg * (
+                self.background_service_var + self.background_service_s**2
+            ) + (1 - w_bg) * (mine**2)
+            var = max(0.0, second - mean**2)
+        else:
+            mean, var = mine, 0.0
+        return EdgeServerState(
+            name=self.name,
+            service_rate=1.0 / max(mean, 1e-9),
+            arrival_rate=lam_total,
+            service_time_s=mine,
+            service_var=var,
+            parallelism_k=self.parallelism_k,
+        )
+
+
+class OffloadGateway:
+    """Routes a request stream between on-device and edge execution."""
+
+    def __init__(
+        self,
+        device_tier: Tier,
+        edges: Sequence[EdgeHandle],
+        wl: Workload,
+        *,
+        bandwidth_Bps: float,
+        epoch_s: float = 1.0,
+        hysteresis: float = 0.0,
+        deadline_timeout: Callable[[float], float] | None = None,
+    ):
+        self.device = device_tier
+        self.edges = list(edges)
+        self.wl = wl
+        self.epoch_s = epoch_s
+        self.manager = AdaptiveOffloadManager(device_tier, hysteresis=hysteresis)
+        self.bandwidth = EwmaEstimator(alpha=0.5, initial=bandwidth_Bps)
+        self.arrivals = SlidingRateEstimator(window_s=30.0)
+        self.decisions: list[Decision] = []
+        self.deadline_timeout = deadline_timeout
+        self.redispatches = 0
+
+    # -- telemetry inputs ---------------------------------------------------
+    def observe_bandwidth(self, measured_Bps: float) -> None:
+        self.bandwidth.update(measured_Bps)
+
+    def observe_arrival(self, t: float) -> None:
+        self.arrivals.record(t)
+
+    # -- epoch decision (Algorithm 1) ----------------------------------------
+    def decide(self, now: float) -> Decision:
+        snap = TelemetrySnapshot(
+            time_s=now,
+            lam_dev=max(self.arrivals.rate(now), self.wl.arrival_rate * 0.0),
+            bandwidth_Bps=self.bandwidth.value,
+        )
+        lam = snap.lam_dev if snap.lam_dev > 0 else self.wl.arrival_rate
+        snap = TelemetrySnapshot(
+            time_s=now, lam_dev=lam, bandwidth_Bps=self.bandwidth.value
+        )
+        states = [e.state() for e in self.edges]
+        d = self.manager.decide(self.wl, snap, states)
+        self.decisions.append(d)
+        return d
+
+    # -- straggler mitigation -------------------------------------------------
+    def check_deadline(self, predicted_s: float, elapsed_s: float) -> bool:
+        """True -> re-dispatch: the request blew through its model-predicted
+        deadline (default 5x predicted mean ~= an M/M/1 p99)."""
+        timeout = (
+            self.deadline_timeout(predicted_s)
+            if self.deadline_timeout
+            else 5.0 * predicted_s
+        )
+        if elapsed_s > timeout:
+            self.redispatches += 1
+            return True
+        return False
+
+    @property
+    def switches(self) -> int:
+        return self.manager.switches

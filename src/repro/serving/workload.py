@@ -1,0 +1,62 @@
+"""Workload generation for serving experiments (paper §4.1).
+
+"We implement a workload generator that generates requests following a
+Poisson process." Prompts/output lengths are drawn from configurable
+distributions so the LLM case exhibits the variable service times the paper
+models with M/M/1 (§3.5).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .engine import Request
+
+__all__ = ["WorkloadConfig", "PoissonWorkload"]
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    arrival_rate: float  # lambda (requests/s, simulated clock)
+    prompt_len: int = 64
+    prompt_len_jitter: int = 0  # uniform +/- jitter
+    max_new_tokens: int = 16
+    new_tokens_geometric_p: float = 0.0  # >0 -> geometric output lengths (LLM case)
+    vocab: int = 256
+    seed: int = 0
+
+
+class PoissonWorkload:
+    """Yields (arrival_time, Request) pairs on a simulated clock."""
+
+    def __init__(self, wc: WorkloadConfig):
+        self.wc = wc
+        self.rng = np.random.default_rng(wc.seed)
+        self._t = 0.0
+        self._rid = 0
+
+    def next_request(self) -> Request:
+        wc = self.wc
+        self._t += self.rng.exponential(1.0 / wc.arrival_rate)
+        L = wc.prompt_len
+        if wc.prompt_len_jitter:
+            L += int(self.rng.integers(-wc.prompt_len_jitter, wc.prompt_len_jitter + 1))
+        L = max(4, L)
+        if wc.new_tokens_geometric_p > 0:
+            nt = 1 + int(self.rng.geometric(wc.new_tokens_geometric_p))
+            nt = min(nt, wc.max_new_tokens)
+        else:
+            nt = wc.max_new_tokens
+        req = Request(
+            rid=self._rid,
+            prompt=self.rng.integers(0, wc.vocab, size=L).astype(np.int32),
+            max_new_tokens=nt,
+            arrival_s=self._t,
+        )
+        self._rid += 1
+        return req
+
+    def take(self, n: int) -> list[Request]:
+        return [self.next_request() for _ in range(n)]

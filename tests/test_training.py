@@ -1,0 +1,194 @@
+"""Optimizers, gradient compression, checkpointing, trainer resume."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, load_pytree, save_pytree
+from repro.configs import get_config
+from repro.training import optimizer as opt
+from repro.training.train_loop import TrainConfig, Trainer
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAdamW:
+    def test_converges_on_quadratic(self):
+        params = {"w": jnp.asarray([4.0, -3.0])}
+        state = opt.adamw_init(params)
+        cfg = opt.AdamWConfig(lr=0.1, weight_decay=0.0)
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = opt.adamw_update(cfg, grads, state, params)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+    def test_clip_by_global_norm(self):
+        grads = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+        clipped, gn = opt.clip_by_global_norm(grads, 1.0)
+        assert float(gn) == pytest.approx(5.0)
+        assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0)
+
+    def test_cosine_schedule(self):
+        lr = opt.cosine_schedule(1.0, warmup=10, total=100)
+        assert float(lr(0)) == pytest.approx(0.0)
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(100)) == pytest.approx(0.1, rel=0.01)
+
+
+class TestAdafactor:
+    def test_converges_on_quadratic(self):
+        params = {"w": jnp.full((256, 256), 2.0)}  # factored leaf
+        state = opt.adafactor_init(params)
+        cfg = opt.AdafactorConfig(lr=0.3)
+        for _ in range(120):
+            grads = {"w": 2 * params["w"]}
+            params, state, _ = opt.adafactor_update(cfg, grads, state, params)
+        assert float(jnp.mean(jnp.abs(params["w"]))) < 0.05
+
+    def test_state_is_factored(self):
+        params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((8,))}
+        state = opt.adafactor_init(params)
+        assert state["factors"]["big"]["vr"].shape == (256,)
+        assert state["factors"]["big"]["vc"].shape == (512,)
+        assert state["factors"]["small"]["v"].shape == (8,)
+
+    def test_memory_footprint_tiny_vs_adamw(self):
+        from repro.models.params import tree_bytes
+
+        params = {"w": jnp.zeros((1024, 1024), jnp.bfloat16)}
+        af = opt.adafactor_init(params)
+        aw = opt.adamw_init(params)
+        assert tree_bytes(af) < tree_bytes(aw) / 100
+
+
+class TestGradCompression:
+    def test_roundtrip_error_bounded(self):
+        g = {"w": jax.random.normal(KEY, (512,))}
+        q, scales, err = opt.compress_grads(g, None)
+        deq = opt.decompress_grads(q, scales)
+        rel = float(jnp.linalg.norm(deq["w"] - g["w"]) / jnp.linalg.norm(g["w"]))
+        assert rel < 0.02  # int8 quantisation noise
+        assert q["w"].dtype == jnp.int8
+
+    def test_error_feedback_accumulates(self):
+        """EF: repeated compression of a constant gradient must average out —
+        the error residual makes the quantised sum track the true sum."""
+        g = {"w": jnp.full((64,), 0.001)}
+        err = None
+        total = jnp.zeros((64,))
+        for _ in range(100):
+            q, s, err = opt.compress_grads(g, err)
+            total = total + opt.decompress_grads(q, s)["w"]
+        np.testing.assert_allclose(total, 0.1 * jnp.ones(64), rtol=0.05)
+
+    def test_compressed_training_converges(self):
+        params = {"w": jnp.asarray([4.0, -3.0])}
+        state = opt.adamw_init(params)
+        state["ef"] = None
+        cfg = opt.AdamWConfig(lr=0.1, weight_decay=0.0, compress=True)
+        err = None
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}
+            q, s, err = opt.compress_grads(grads, err)
+            grads = opt.decompress_grads(q, s)
+            params, state, _ = opt.adamw_update(cfg, grads, state, params)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 5e-2
+
+
+class TestCheckpointer:
+    def test_roundtrip_structure(self, tmp_path):
+        tree = {
+            "a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+            "b": (jnp.zeros(3), [jnp.int32(4), None]),
+            "c": {"count": jnp.zeros((), jnp.int32)},
+        }
+        p = tmp_path / "x.ckpt"
+        save_pytree(p, tree)
+        back = load_pytree(p)
+        assert np.asarray(back["a"]).dtype == np.dtype("bfloat16")
+        assert isinstance(back["b"], tuple) and isinstance(back["b"][1], list)
+        assert back["b"][1][1] is None
+
+    def test_restore_with_target_dtypes(self, tmp_path):
+        tree = {"w": jnp.ones((4, 4), jnp.float32)}
+        p = tmp_path / "x.ckpt"
+        save_pytree(p, tree)
+        target = {"w": jax.ShapeDtypeStruct((4, 4), jnp.bfloat16)}
+        back = load_pytree(p, target=target)
+        assert back["w"].dtype == jnp.bfloat16
+
+    def test_retention_and_latest(self, tmp_path):
+        ck = Checkpointer(tmp_path, keep=2)
+        for s in (10, 20, 30):
+            ck.save(s, {"x": jnp.asarray(s)})
+        assert ck.steps() == [20, 30]
+        step, tree = ck.restore(target={"x": jax.ShapeDtypeStruct((), jnp.int32)})
+        assert step == 30 and int(tree["x"]) == 30
+
+    def test_no_tmp_residue(self, tmp_path):
+        ck = Checkpointer(tmp_path)
+        ck.save(1, {"x": jnp.zeros(4)})
+        assert not list(tmp_path.glob("*.tmp"))
+
+
+class TestTrainerResume:
+    def test_bit_exact_resume(self, tmp_path):
+        cfg = get_config("starcoder2_3b").reduced()
+        tc = TrainConfig(
+            steps=6, batch=2, seq_len=32, checkpoint_every=3,
+            checkpoint_dir=str(tmp_path), log_every=1, lr=1e-3,
+        )
+        t1 = Trainer(cfg, tc)
+        p_full, s_full, _ = t1.run()
+
+        # fresh trainer resumes from step 3 and must land on identical params
+        t2 = Trainer(cfg, tc)
+        params, state, step = t2.resume()
+        assert step in (3, 6)
+        if step == 6:
+            # restore the intermediate checkpoint explicitly
+            step, tree = t2.ckpt.restore(
+                3,
+                target={
+                    "params": __import__("repro.models", fromlist=["lm"]).lm.abstract_model(cfg),
+                    "opt": opt.abstract_adamw_state(
+                        __import__("repro.models", fromlist=["lm"]).lm.abstract_model(cfg)
+                    ),
+                },
+            )
+            params, state = tree["params"], tree["opt"]
+            step = 3
+        p2, s2, _ = t2.run(params, state, start_step=step)
+        for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_straggler_watchdog_records(self):
+        cfg = get_config("starcoder2_3b").reduced()
+        tc = TrainConfig(steps=3, batch=2, seq_len=16, deadline_factor=0.0)
+        t = Trainer(cfg, tc)
+        t.run()
+        # with a zero deadline every post-warmup step is a "straggler";
+        # only 3 steps -> none recorded (needs 8), but the path executed
+        assert isinstance(t.straggler_events, list)
+
+
+class TestElasticMesh:
+    def test_remesh_shrinks(self):
+        from repro.launch.mesh import elastic_mesh
+
+        # cannot build >1-device meshes on CPU here; just validate arithmetic
+        with pytest.raises(ValueError):
+            elastic_mesh(7, model_parallel=16)
+
+    def test_data_pipeline_stateless_resume(self):
+        from repro.data.pipeline import DataConfig, SyntheticLM
+
+        cfg = get_config("starcoder2_3b").reduced()
+        src = SyntheticLM(cfg, DataConfig(batch=2, seq_len=16, seed=3))
+        a = src[5]
+        b = src[5]
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        c = src[6]
+        assert not np.array_equal(a["tokens"], c["tokens"])
