@@ -6,6 +6,11 @@ devices grid (Fig 2), complex-model M/M/1 case (Fig 3), bandwidth sweeps
 (Fig 4), split processing (Fig 5a), request-rate sweep (Fig 5b), tenancy
 sweep (Fig 5c), and the two adaptive-manager case studies (Figs 6-7).
 
+Every experiment is expressed as a ``repro.core.Scenario`` — the unified
+validated spec — and driven through ``analytic`` / ``simulate`` /
+``crossovers`` / ``Scenario.manager``, so prediction, validation, and the
+adaptive manager all consume the exact same operating-point description.
+
 Tier service times are representative of published Jetson-TX2 / Orin-Nano /
 A2-class inference measurements for the paper's three DNN workloads
 (MobileNetV2 / InceptionV4 / YOLOv8n) — the paper's own two-level
@@ -18,24 +23,16 @@ on-device only at 2 Mbps, and the Fig 7 load sequence walks E1 -> E2 -> local.
 
 from __future__ import annotations
 
+import zlib
 from dataclasses import replace
 
 import numpy as np
 
 from repro.core import simulation as S
-from repro.core.crossover import bandwidth_crossover, tenancy_crossover
-from repro.core.latency import (
-    NetworkPath,
-    ServiceModel,
-    Tier,
-    Workload,
-    edge_offload_latency,
-    on_device_latency,
-)
-from repro.core.manager import AdaptiveOffloadManager, EdgeServerState
-from repro.core.multitenant import TenantStream, multitenant_edge_latency
+from repro.core.latency import NetworkPath, ServiceModel, Tier, Workload
+from repro.core.multitenant import TenantStream
+from repro.core.scenario import EdgeSpec, Scenario, analytic, crossovers, simulate
 from repro.core.split import LayerProfile, SplitPlanner
-from repro.core.telemetry import TelemetrySnapshot
 
 from .common import emit, mape, timed
 
@@ -60,12 +57,38 @@ def service_s(workload: str, hw: str) -> float:
     return SERVICE_MS[workload][hw] / 1e3
 
 
-def _tiers(workload: str):
-    dev_tx2 = Tier("tx2", service_s(workload, "tx2"), service_model=ServiceModel.DETERMINISTIC)
-    dev_orin = Tier("orin", service_s(workload, "orin"), service_model=ServiceModel.DETERMINISTIC)
-    edge_a2 = Tier("a2", service_s(workload, "a2"), parallelism_k=K_EDGE[workload],
-                   service_model=ServiceModel.DETERMINISTIC)
-    return dev_tx2, dev_orin, edge_a2
+def _seed(tag: str, mod: int = 1000) -> int:
+    """Stable per-tag seed (str hash() is randomised per interpreter run)."""
+    return zlib.crc32(tag.encode()) % mod
+
+
+def scenario(
+    wname: str,
+    dev_hw: str,
+    *,
+    edge_hw: str = "a2",
+    lam: float = 2.0,
+    mbps: float = 5.0,
+    model: ServiceModel = ServiceModel.DETERMINISTIC,
+    background: tuple[TenantStream, ...] = (),
+    allow_unstable: bool = False,
+) -> Scenario:
+    """One paper operating point as a validated Scenario spec."""
+    dreq, dres = PAYLOADS[wname]
+    return Scenario(
+        workload=Workload(lam, dreq, dres, name=wname),
+        device=Tier(dev_hw, service_s(wname, dev_hw), service_model=model),
+        network=NetworkPath(mbps * 1e6 / 8),
+        edges=(
+            EdgeSpec(
+                Tier(edge_hw, service_s(wname, edge_hw),
+                     parallelism_k=K_EDGE[wname], service_model=model),
+                background=background,
+            ),
+        ),
+        allow_unstable=allow_unstable,
+        name=f"{wname}:{dev_hw}->{edge_hw}",
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -75,28 +98,19 @@ def _tiers(workload: str):
 
 def fig2_workload_characteristics() -> float:
     errors = []
-    net = NetworkPath(5e6 / 8)
     for wname in WORKLOAD_GFLOPS:
-        dreq, dres = PAYLOADS[wname]
-        wl = Workload(2.0, dreq, dres)
-        tx2, orin, a2 = _tiers(wname)
-        for dev in (tx2, orin):
-            pred_dev = float(on_device_latency(wl, dev))
-            sim_dev = S.simulate_on_device(
-                wl.arrival_rate, S.Deterministic(dev.service_time_s), n=60_000,
-                seed=hash(wname) % 1000,
-            )
-            errors.append(mape(pred_dev, sim_dev.mean))
-        pred_edge = float(edge_offload_latency(wl, a2, net))
-        sim_edge = S.simulate_offload(
-            wl.arrival_rate, S.Deterministic(a2.service_time_s), int(a2.parallelism_k),
-            bandwidth_Bps=net.bandwidth_Bps, req_bytes=dreq, res_bytes=dres,
-            n=60_000, seed=hash(wname) % 997,
-        )
+        for dev_hw in ("tx2", "orin"):
+            scn = scenario(wname, dev_hw)
+            pred = analytic(scn)
+            sim_dev = simulate(scn, "on_device", n=60_000, seed=_seed(wname))
+            errors.append(mape(float(pred["on_device"].total), sim_dev.mean))
+        # the edge side is device-independent: validate it once per workload
+        scn_edge = scenario(wname, "tx2")
+        pred_edge = float(analytic(scn_edge)["edge[0]"].total)
+        sim_edge = simulate(scn_edge, "edge[0]", n=60_000, seed=_seed(wname, 997))
         errors.append(mape(pred_edge, sim_edge.mean))
-        (_, us) = (None, 0.0)
     overall = float(np.mean(errors))
-    _, us = timed(lambda: edge_offload_latency(wl, a2, net))
+    _, us = timed(lambda: analytic(scn_edge))
     emit("fig2_workload_characteristics", us, f"mape_pct={overall:.2f}")
     return overall
 
@@ -108,26 +122,28 @@ def fig2_workload_characteristics() -> float:
 
 def fig3_complex_models() -> float:
     errors = []
-    net = NetworkPath(5e6 / 8)
     for name, (s_dev, s_edge, dreq, dres) in {
         "lstm": (0.020, 0.006, 4_000, 500),
         "llm": (0.800, 0.180, 2_000, 2_000),
     }.items():
-        wl = Workload(0.8 if name == "llm" else 2.0, dreq, dres)
-        dev = Tier("orin", s_dev, service_model=ServiceModel.EXPONENTIAL)
-        edge = Tier("a2", s_edge, service_model=ServiceModel.EXPONENTIAL)
-        pred_dev = float(on_device_latency(wl, dev))
-        sim_dev = S.simulate_on_device(wl.arrival_rate, S.Exponential(s_dev), n=80_000, seed=11)
-        pred_edge = float(edge_offload_latency(wl, edge, net))
-        sim_edge = S.simulate_offload(
-            wl.arrival_rate, S.Exponential(s_edge), 1, bandwidth_Bps=net.bandwidth_Bps,
-            req_bytes=dreq, res_bytes=dres, n=80_000, seed=13,
+        scn = Scenario(
+            workload=Workload(0.8 if name == "llm" else 2.0, dreq, dres, name=name),
+            device=Tier("orin", s_dev, service_model=ServiceModel.EXPONENTIAL),
+            network=NetworkPath(5e6 / 8),
+            edges=(EdgeSpec(Tier("a2", s_edge, service_model=ServiceModel.EXPONENTIAL)),),
+            name=name,
         )
-        errors += [mape(pred_dev, sim_dev.mean), mape(pred_edge, sim_edge.mean)]
+        pred = analytic(scn)
+        sim_dev = simulate(scn, "on_device", n=80_000, seed=11)
+        sim_edge = simulate(scn, "edge[0]", n=80_000, seed=13)
+        errors += [
+            mape(float(pred["on_device"].total), sim_dev.mean),
+            mape(float(pred["edge[0]"].total), sim_edge.mean),
+        ]
         # offloading should win for the heavy LLM (paper: "even more pronounced")
-        assert pred_edge < pred_dev or name == "lstm"
+        assert pred.best_strategy == "edge[0]" or name == "lstm"
     overall = float(np.mean(errors))
-    _, us = timed(lambda: on_device_latency(wl, dev))
+    _, us = timed(lambda: analytic(scn))
     emit("fig3_complex_models", us, f"mape_pct={overall:.2f}")
     return overall
 
@@ -140,18 +156,13 @@ def fig3_complex_models() -> float:
 def fig4_bandwidth_crossovers() -> dict:
     out = {}
     wname = "inceptionv4"
-    dreq, dres = PAYLOADS[wname]
-    wl = Workload(2.0, dreq, dres)
     for edge_hw in ("rtx4070", "a2"):
         for dev_hw in ("tx2", "orin"):
-            dev = Tier(dev_hw, service_s(wname, dev_hw))
-            edge = Tier(edge_hw, service_s(wname, edge_hw), parallelism_k=K_EDGE[wname])
-            c = bandwidth_crossover(wl, dev, edge)
-            key = f"{dev_hw}->{edge_hw}"
-            out[key] = None if c.value is None else c.value * 8 / 1e6  # Mbps
+            scn = scenario(wname, dev_hw, edge_hw=edge_hw, allow_unstable=True)
+            c = crossovers(scn, "bandwidth")
+            out[f"{dev_hw}->{edge_hw}"] = None if c.value is None else c.value * 8 / 1e6
     # the faster device needs MORE bandwidth before offloading pays (Fig 4a)
-    (_, us) = timed(lambda: bandwidth_crossover(wl, Tier("tx2", service_s(wname, "tx2")),
-                                                Tier("a2", service_s(wname, "a2"), parallelism_k=1)))
+    _, us = timed(lambda: crossovers(scenario(wname, "tx2", allow_unstable=True), "bandwidth"))
     ok = (out["tx2->rtx4070"] or 0) <= (out["orin->rtx4070"] or np.inf)
     emit("fig4_bandwidth_crossovers", us,
          f"tx2@rtx={out['tx2->rtx4070']:.2f}Mbps;orin@rtx={out['orin->rtx4070']:.2f}Mbps;ordered={ok}")
@@ -185,7 +196,6 @@ def fig5a_split_processing() -> float:
     ]
     planner = SplitPlanner(layers, wl)
     net = NetworkPath(50e6 / 8)  # 50 Mbps (paper's split experiment)
-    sweep = planner.sweep(dev, edge, net)
     plan = planner.plan(dev, edge, net)
     # validate three split points against simulation
     errs = []
@@ -214,21 +224,17 @@ def fig5a_split_processing() -> float:
 
 def fig5b_request_rate() -> dict:
     wname = "mobilenetv2"
-    dreq, dres = PAYLOADS[wname]
-    dev = Tier("orin", service_s(wname, "orin"), parallelism_k=1)
-    edge = Tier("a2", service_s(wname, "a2"), parallelism_k=4)
+    base = scenario(wname, "orin", lam=1.0, allow_unstable=True)
     out = {}
     for mbps in (10, 20):
-        net = NetworkPath(mbps * 1e6 / 8)
-        lams = np.linspace(1, 120, 40)
-        te = np.array([
-            float(edge_offload_latency(Workload(l, dreq, dres), edge, net)) for l in lams
-        ])
-        td = np.array([float(on_device_latency(Workload(l, dreq, dres), dev)) for l in lams])
-        finite = np.isfinite(te)
-        wins = te[finite] < td[finite]
-        out[mbps] = int(wins.sum())
-    _, us = timed(lambda: on_device_latency(Workload(10, dreq, dres), dev))
+        at_bw = base.replaced("network.bandwidth_Bps", mbps * 1e6 / 8)
+        wins = 0
+        for scn in at_bw.sweep("workload.arrival_rate", np.linspace(1, 120, 40)):
+            totals = analytic(scn).totals()
+            if np.isfinite(totals["edge[0]"]) and totals["edge[0]"] < totals["on_device"]:
+                wins += 1
+        out[mbps] = wins
+    _, us = timed(lambda: analytic(base))
     emit("fig5b_request_rate", us,
          f"offload_wins@10Mbps={out[10]}/40;@20Mbps={out[20]}/40;faster_net_wins_more={out[20] >= out[10]}")
     return out
@@ -241,25 +247,21 @@ def fig5b_request_rate() -> dict:
 
 def fig5c_multitenancy() -> int | None:
     wname = "inceptionv4"
-    dreq, dres = PAYLOADS[wname]
-    wl = Workload(2.0, dreq, dres)
-    dev = Tier("tx2", service_s(wname, "tx2"))
-    edge = Tier("a2", service_s(wname, "a2"), parallelism_k=K_EDGE[wname])
-    net = NetworkPath(5e6 / 8)
-    tenant = TenantStream(2.0, service_s(wname, "a2"))
-    m_star = tenancy_crossover(wl, dev, edge, net, tenant, max_tenants=128)
-    # validate the latency at m_star-1 and m_star+1 against simulation
+    scn = scenario(wname, "tx2", allow_unstable=True)
+    c = crossovers(scn, "tenancy", max_tenants=128)
+    m_star = None if c.value is None else int(c.value)
+    # validate the latency around m_star against simulation: a scenario whose
+    # edge hosts (m-1) background copies of the same app IS the m-tenant case
     errs = []
     if m_star and m_star > 1:
+        template = scn.edges[0].own_stream(scn.workload)
         for m in (max(1, m_star - 2), m_star):
-            pred = float(multitenant_edge_latency(wl, edge, net, [tenant] * m))
-            sim = S.simulate_multitenant_offload(
-                [(2.0, S.Deterministic(tenant.service_mean_s))] * m,
-                max(1, int(edge.parallelism_k)), bandwidth_Bps=net.bandwidth_Bps,
-                req_bytes=dreq, res_bytes=dres, n_per_stream=max(4000, 40000 // m), seed=m,
-            )
+            scn_m = scn.replaced("edges[0].background", (template,) * (m - 1))
+            pred = float(analytic(scn_m)["edge[0]"].total)
+            sim = simulate(scn_m, "edge[0]",
+                           n=max(4000, 40000 // m) * m, seed=m)
             errs.append(mape(pred, sim.stream_mean(0)))
-    _, us = timed(lambda: multitenant_edge_latency(wl, edge, net, [tenant] * 4))
+    _, us = timed(lambda: crossovers(scn, "tenancy", max_tenants=8))
     emit("fig5c_multitenancy", us,
          f"crossover_m={m_star};mape_pct={np.mean(errs):.2f}" if errs else f"crossover_m={m_star}")
     return m_star
@@ -271,19 +273,14 @@ def fig5c_multitenancy() -> int | None:
 
 
 def fig6_network_adaptation() -> list[str]:
-    wname = "mobilenetv2"
-    dreq, dres = PAYLOADS[wname]
-    wl = Workload(10.0, dreq, dres)
-    dev = Tier("tx2", service_s(wname, "tx2"))
-    mgr = AdaptiveOffloadManager(dev)
-    edge = EdgeServerState("a2", 1.0 / service_s(wname, "a2"), 10.0, service_s(wname, "a2"),
-                           parallelism_k=K_EDGE[wname])
-    schedule = [(t, bw) for t, bw in [(0, 20e6 / 8), (20, 10e6 / 8), (40, 2e6 / 8), (60, 20e6 / 8)]]
+    scn = scenario("mobilenetv2", "tx2", lam=10.0, mbps=20.0)
+    mgr = scn.manager()
+    states = scn.edge_states()
     strategies = []
-    for t, bw in schedule:
-        snap = TelemetrySnapshot(time_s=t, lam_dev=10.0, bandwidth_Bps=bw)
-        strategies.append(mgr.decide(wl, snap, [edge]).strategy)
-    _, us = timed(lambda: mgr.decide(wl, TelemetrySnapshot(0, 10.0, 2.5e6), [edge]))
+    for t, bw in [(0, 20e6 / 8), (20, 10e6 / 8), (40, 2e6 / 8), (60, 20e6 / 8)]:
+        snap = scn.snapshot(time_s=t, bandwidth_Bps=bw)
+        strategies.append(mgr.decide(scn.workload, snap, states).strategy)
+    _, us = timed(lambda: mgr.decide(scn.workload, scn.snapshot(bandwidth_Bps=2.5e6), states))
     emit("fig6_network_adaptation", us, ";".join(strategies))
     return strategies
 
@@ -295,26 +292,30 @@ def fig6_network_adaptation() -> list[str]:
 
 def fig7_multitenant_adaptation() -> list[str]:
     wname = "yolov8n"
-    dreq, dres = PAYLOADS[wname]
-    wl = Workload(10.0, dreq, dres)
     s_edge = service_s(wname, "a2")
-    dev = Tier("tx2", service_s(wname, "tx2"))
-    mgr = AdaptiveOffloadManager(dev)
 
-    def edge(name, lam):
-        return EdgeServerState(name, 1.0 / s_edge, lam, s_edge, parallelism_k=K_EDGE[wname])
+    def phase(bg1: float, bg2: float) -> Scenario:
+        bg = lambda lam: (TenantStream(lam, s_edge),)
+        base = scenario(wname, "tx2", lam=10.0, mbps=40.0, allow_unstable=True)
+        e = base.edges[0].tier
+        return replace(
+            base,
+            edges=(
+                EdgeSpec(replace(e, name="E1"), background=bg(bg1)),
+                EdgeSpec(replace(e, name="E2"), background=bg(bg2)),
+            ),
+        )
 
-    net = 40e6 / 8  # stable high-bandwidth link; load is what varies here
-    phases = [
-        ("t0", [edge("E1", 10 + 10), edge("E2", 30)]),
-        ("t80", [edge("E1", 50 + 10), edge("E2", 30)]),
-        ("t160", [edge("E1", 50), edge("E2", 50)]),
-    ]
+    # background load walks E1 -> E2 -> everything saturated (own 10 rps adds
+    # on top; edge capacity is 1/s_edge ~= 52.6 rps)
+    phases = [phase(10, 30), phase(50, 30), phase(50, 50)]
+    mgr = phases[0].manager()
     targets = []
-    for _, edges in phases:
-        d = mgr.decide(wl, TelemetrySnapshot(0, 10.0, net), edges)
+    for scn in phases:
+        d = mgr.decide(scn.workload, scn.snapshot(), scn.edge_states())
         targets.append(d.target_name)
-    _, us = timed(lambda: mgr.decide(wl, TelemetrySnapshot(0, 10.0, net), phases[0][1]))
+    _, us = timed(lambda: mgr.decide(phases[0].workload, phases[0].snapshot(),
+                                     phases[0].edge_states()))
     emit("fig7_multitenant_adaptation", us, ";".join(targets))
     return targets
 
@@ -326,30 +327,21 @@ def fig7_multitenant_adaptation() -> list[str]:
 
 def model_accuracy_suite() -> dict:
     preds, obs = [], []
-    rng = np.random.default_rng(0)
-    scenarios = []
-    for wname in WORKLOAD_GFLOPS:
-        dreq, dres = PAYLOADS[wname]
-        for lam in (1.0, 2.0, 5.0):
-            for mbps in (5, 20):
-                scenarios.append((wname, lam, mbps, dreq, dres))
-    for i, (wname, lam, mbps, dreq, dres) in enumerate(scenarios):
-        wl = Workload(lam, dreq, dres)
-        net = NetworkPath(mbps * 1e6 / 8)
-        tx2, orin, a2 = _tiers(wname)
-        pred = float(edge_offload_latency(wl, a2, net))
-        if not np.isfinite(pred):
-            continue
-        sim = S.simulate_offload(
-            lam, S.Deterministic(a2.service_time_s), int(a2.parallelism_k),
-            bandwidth_Bps=net.bandwidth_Bps, req_bytes=dreq, res_bytes=dres,
-            n=60_000, seed=100 + i,
-        )
-        preds.append(pred)
-        obs.append(sim.mean)
-        pred_d = float(on_device_latency(wl, tx2))
-        sim_d = S.simulate_on_device(lam, S.Deterministic(tx2.service_time_s), n=60_000, seed=200 + i)
-        preds.append(pred_d)
+    grid = [
+        (wname, lam, mbps)
+        for wname in WORKLOAD_GFLOPS
+        for lam in (1.0, 2.0, 5.0)
+        for mbps in (5, 20)
+    ]
+    for i, (wname, lam, mbps) in enumerate(grid):
+        scn = scenario(wname, "tx2", lam=lam, mbps=mbps, allow_unstable=True)
+        pred = analytic(scn).totals()
+        if np.isfinite(pred["edge[0]"]):
+            sim = simulate(scn, "edge[0]", n=60_000, seed=100 + i)
+            preds.append(pred["edge[0]"])
+            obs.append(sim.mean)
+        sim_d = simulate(scn, "on_device", n=60_000, seed=200 + i)
+        preds.append(pred["on_device"])
         obs.append(sim_d.mean)
     preds, obs = np.array(preds), np.array(obs)
     rel = np.abs(preds - obs) / obs * 100
@@ -359,7 +351,7 @@ def model_accuracy_suite() -> dict:
         "within_10pct": float((rel <= 10).mean() * 100),
         "n": int(len(rel)),
     }
-    _, us = timed(lambda: edge_offload_latency(Workload(2, 1e5, 1e3), Tier("a2", 0.01), NetworkPath(1e6)))
+    _, us = timed(lambda: analytic(scenario("mobilenetv2", "tx2")))
     emit("model_accuracy_suite", us,
          f"mape_pct={out['mape_pct']:.2f};within5={out['within_5pct']:.1f};within10={out['within_10pct']:.1f};n={out['n']}")
     return out

@@ -5,8 +5,9 @@ schedule and a Fig. 7-style edge-load surge.
 
 The device tier is the actual JAX serving engine (repro.serving.engine); the
 edge tiers are modelled by their profiled service times (exactly the paper's
-two-level methodology). Watch the gateway switch strategies as conditions
-change, driven purely by the closed-form predictions.
+two-level methodology). The whole deployment is declared once as a
+`Scenario`; the gateway is built straight from it. Watch it switch strategies
+as conditions change, driven purely by the closed-form predictions.
 
 Run: PYTHONPATH=src python examples/adaptive_offload.py
 """
@@ -15,10 +16,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.latency import ServiceModel, Tier, Workload
+from repro.core import EdgeSpec, NetworkPath, Scenario, ServiceModel, Tier, Workload
 from repro.models import lm
 from repro.serving.engine import Engine, ServeConfig
-from repro.serving.gateway import EdgeHandle, OffloadGateway
+from repro.serving.gateway import OffloadGateway
 from repro.serving.workload import PoissonWorkload, WorkloadConfig
 
 # --- device tier: a real engine over a reduced LM ---------------------------
@@ -35,15 +36,24 @@ engine.drain()
 s_dev, var_dev = engine.observed_service_stats()
 print(f"profiled device service: {s_dev*1e3:.1f} ms/tick (var {var_dev:.2e})")
 
-device_tier = Tier("device-engine", s_dev, service_model=ServiceModel.EXPONENTIAL)
-
-# --- edge tiers + gateway -----------------------------------------------------
-wl = Workload(arrival_rate=10.0, req_bytes=250_000, res_bytes=2_000)
-edges = [
-    EdgeHandle("edge-pod-A", service_mean_s=s_dev / 8, parallelism_k=4.0),
-    EdgeHandle("edge-pod-B", service_mean_s=s_dev / 8, parallelism_k=4.0),
-]
-gw = OffloadGateway(device_tier, edges, wl, bandwidth_Bps=2.5e6, epoch_s=1.0)
+# --- the deployment, declared once ------------------------------------------
+# allow_unstable: the Fig. 6 schedule deliberately drives the 2 Mbps phase
+# (and possibly the engine itself) past saturation — the models report inf
+# there and Algorithm 1 falls back to the stable strategy.
+scn = Scenario(
+    workload=Workload(arrival_rate=10.0, req_bytes=250_000, res_bytes=2_000),
+    device=Tier("device-engine", s_dev, service_model=ServiceModel.EXPONENTIAL),
+    edges=(
+        EdgeSpec(Tier("edge-pod-A", s_dev / 8, parallelism_k=4.0,
+                      service_model=ServiceModel.EXPONENTIAL)),
+        EdgeSpec(Tier("edge-pod-B", s_dev / 8, parallelism_k=4.0,
+                      service_model=ServiceModel.EXPONENTIAL)),
+    ),
+    network=NetworkPath(bandwidth_Bps=2.5e6),
+    allow_unstable=True,
+    name="lm-serving",
+)
+gw = OffloadGateway.from_scenario(scn, epoch_s=1.0)
 
 print("\n--- Fig. 6 replay: bandwidth 20 -> 10 -> 2 -> 20 Mbps ---")
 for t, mbps in [(0, 20), (20, 10), (40, 2), (60, 20)]:
@@ -57,10 +67,10 @@ for t, mbps in [(0, 20), (20, 10), (40, 2), (60, 20)]:
 
 print("\n--- Fig. 7 replay: edge load surge ---")
 for t, (lam_a, lam_b) in [(80, (10, 30)), (160, (80, 30)), (240, (120, 118))]:
-    edges[0].background_rate = lam_a
-    edges[0].background_service_s = edges[0].service_mean_s
-    edges[1].background_rate = lam_b
-    edges[1].background_service_s = edges[1].service_mean_s
+    gw.edges[0].background_rate = lam_a
+    gw.edges[0].background_service_s = gw.edges[0].service_mean_s
+    gw.edges[1].background_rate = lam_b
+    gw.edges[1].background_service_s = gw.edges[1].service_mean_s
     for _ in range(3):
         gw.observe_bandwidth(20e6 / 8)
     for dt in np.arange(0.0, 1.0, 0.1):

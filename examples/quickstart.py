@@ -1,60 +1,63 @@
-"""Quickstart: the paper's models in five minutes.
+"""Quickstart: the paper's models in five minutes, via one Scenario spec.
 
-1. Closed-form latency prediction for on-device vs edge offloading.
-2. Validation against the discrete-event simulator.
-3. A crossover query ("at what bandwidth should I offload?").
-4. One adaptive-manager decision (Algorithm 1).
+1. Describe the operating point once as a validated `Scenario`.
+2. Closed-form latency prediction for every strategy (`analytic`).
+3. Validation against the discrete-event simulator (`simulate`).
+4. A crossover query ("at what bandwidth should I offload?").
+5. One adaptive-manager decision (Algorithm 1) from the same spec.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import simulation as S
-from repro.core.crossover import bandwidth_crossover
-from repro.core.latency import (
+from repro.core import (
+    EdgeSpec,
     NetworkPath,
+    Scenario,
     ServiceModel,
     Tier,
     Workload,
-    edge_offload_latency,
-    on_device_latency,
+    analytic,
+    crossovers,
+    simulate,
 )
-from repro.core.manager import AdaptiveOffloadManager, EdgeServerState
-from repro.core.telemetry import TelemetrySnapshot
 
-# --- 1. describe the system ------------------------------------------------
-# A camera app: 10 inference requests/s, 25 KB frames in, 2 KB results back.
-wl = Workload(arrival_rate=10.0, req_bytes=25_000, res_bytes=2_000)
-device = Tier("jetson", service_time_s=0.035, service_model=ServiceModel.DETERMINISTIC)
-edge = Tier("edge-gpu", service_time_s=0.005, parallelism_k=2,
-            service_model=ServiceModel.DETERMINISTIC)
-net = NetworkPath(bandwidth_Bps=20e6 / 8)  # 20 Mbps
+# --- 1. describe the system ONCE ---------------------------------------------
+# A camera app: 10 inference requests/s, 25 KB frames in, 2 KB results back,
+# a Jetson-class device, one 2-way edge GPU, a 20 Mbps link.
+scn = Scenario(
+    workload=Workload(arrival_rate=10.0, req_bytes=25_000, res_bytes=2_000),
+    device=Tier("jetson", service_time_s=0.035, service_model=ServiceModel.DETERMINISTIC),
+    edges=(
+        EdgeSpec(Tier("edge-gpu", service_time_s=0.005, parallelism_k=2,
+                      service_model=ServiceModel.DETERMINISTIC)),
+    ),
+    network=NetworkPath(bandwidth_Bps=20e6 / 8),  # 20 Mbps
+    name="camera-app",
+)
 
-t_dev = float(on_device_latency(wl, device))
-t_edge = edge_offload_latency(wl, edge, net, breakdown=True)
-print(f"on-device : {t_dev*1e3:7.2f} ms")
-print(f"offloading: {float(t_edge.total)*1e3:7.2f} ms  breakdown:")
-for k, v in t_edge.terms.items():
+# --- 2. closed-form prediction per strategy -----------------------------------
+pred = analytic(scn)
+print(f"on-device : {float(pred['on_device'].total)*1e3:7.2f} ms")
+print(f"offloading: {float(pred['edge[0]'].total)*1e3:7.2f} ms  breakdown:")
+for k, v in pred["edge[0]"].terms.items():
     print(f"   {k:12s} {float(np.asarray(v))*1e3:7.2f} ms")
+print(f"analytic argmin: {pred.best_strategy}")
 
-# --- 2. validate against simulation -----------------------------------------
-sim = S.simulate_offload(
-    wl.arrival_rate, S.Deterministic(edge.service_time_s), int(edge.parallelism_k),
-    bandwidth_Bps=net.bandwidth_Bps, req_bytes=wl.req_bytes, res_bytes=wl.res_bytes,
-    n=100_000, seed=0,
-)
-err = abs(float(t_edge.total) - sim.mean) / sim.mean * 100
+# --- 3. validate against simulation (same spec, no re-assembly) ----------------
+sim = simulate(scn, "edge[0]", n=100_000, seed=0)
+err = abs(float(pred["edge[0]"].total) - sim.mean) / sim.mean * 100
 print(f"\nsimulated : {sim.mean*1e3:7.2f} ms   (closed-form error {err:.2f}% — paper reports 2.2% MAPE)")
 
-# --- 3. quantitative crossover ----------------------------------------------
-c = bandwidth_crossover(wl, device, edge)
+# --- 4. quantitative crossover ------------------------------------------------
+c = crossovers(scn, "bandwidth")
 print(f"\noffloading pays above {c.value*8/1e6:.2f} Mbps")
 
-# --- 4. one Algorithm-1 decision ---------------------------------------------
-mgr = AdaptiveOffloadManager(device)
-snap = TelemetrySnapshot(time_s=0.0, lam_dev=wl.arrival_rate, bandwidth_Bps=net.bandwidth_Bps)
-est = EdgeServerState("edge0", 1.0 / edge.service_time_s, wl.arrival_rate,
-                      edge.service_time_s, parallelism_k=2.0)
-d = mgr.decide(wl, snap, [est])
+# --- 5. one Algorithm-1 decision, built from the same spec ---------------------
+mgr = scn.manager()
+d = mgr.decide(scn.workload, scn.snapshot(), scn.edge_states())
 print(f"manager decision: {d.target_name} (predicted {d.predicted_latency_s*1e3:.2f} ms)")
+
+# the spec round-trips through plain JSON — sweepable, storable, shareable
+assert Scenario.from_dict(scn.to_dict()) == scn

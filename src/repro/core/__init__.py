@@ -17,12 +17,29 @@ from .latency import (
     on_device_latency,
     proc_wait,
 )
+from .crossover import (
+    Crossover,
+    arrival_rate_crossovers,
+    bandwidth_crossover,
+    service_gap_bound,
+    solve_crossover,
+    tenancy_crossover,
+)
 from .manager import ON_DEVICE, AdaptiveOffloadManager, Decision, EdgeServerState
 from .multitenant import (
     AggregateLoad,
     TenantStream,
     aggregate_streams,
     multitenant_edge_latency,
+)
+from .scenario import (
+    EdgeSpec,
+    Scenario,
+    ScenarioError,
+    ScenarioPrediction,
+    analytic,
+    crossovers,
+    simulate,
 )
 from .queueing import (
     QueueStats,

@@ -22,12 +22,11 @@ import numpy as np
 
 from .latency import (
     NetworkPath,
-    ServiceModel,
     Tier,
     Workload,
-    md1_wait,
     mg1_wait,
     mm1_wait,
+    proc_wait,
 )
 from .telemetry import TelemetrySnapshot
 
@@ -72,36 +71,55 @@ class AdaptiveOffloadManager:
         *,
         hysteresis: float = 0.0,
         tail_z: float = 0.0,
+        return_results: bool = True,
     ):
         if hysteresis < 0:
             raise ValueError("hysteresis must be >= 0")
         self.device = device
         self.hysteresis = hysteresis
         self.tail_z = tail_z
+        # paper §3.3: results consumed at the edge omit the return network
+        # delay — must match the Scenario/analytic() setting or the argmin
+        # disagrees with the closed forms on the same spec
+        self.return_results = return_results
         self._epoch = 0
         self._last: Decision | None = None
         self.history: list[Decision] = []
 
     # -- Algorithm 1 lines 1-2 ------------------------------------------------
     def _predict_device(self, lam_dev: float) -> float:
-        mu_dev = 1.0 / self.device.service_time_s  # line 1
-        if self.device.service_model is ServiceModel.EXPONENTIAL:
-            w = mm1_wait(lam_dev, self.device.parallelism_k * mu_dev)
-        else:
-            w = md1_wait(lam_dev, mu_dev, self.device.parallelism_k)  # line 2
-        return float(w + self.device.service_time_s)
+        # proc_wait dispatches on the device's service model (M/D/1, M/M/1,
+        # or M/G/1 with its variance) exactly as the paper's lines 1-2 do —
+        # duplicating that dispatch here is how GENERAL was once mis-modeled
+        return float(proc_wait(self.device, lam_dev) + self.device.service_time_s)
 
     # -- Algorithm 1 lines 3-6 ------------------------------------------------
     def _predict_edge(
         self, edge: EdgeServerState, wl: Workload, lam_dev: float, bandwidth_Bps: float
     ) -> float:
-        b = edge.bandwidth_Bps or bandwidth_Bps
-        mu_req = b / wl.req_bytes
-        mu_res = b / wl.res_bytes
-        # line 3: T_net_req <- M/M/1(lambda_dev, B/D_req) + D_req/B
-        t_req = float(mm1_wait(lam_dev, mu_req) + wl.req_bytes / b)
-        # line 4: T_net_res <- M/M/1(lambda_edge,E, B/D_res) + D_res/B
-        t_res = float(mm1_wait(edge.arrival_rate, mu_res) + wl.res_bytes / b)
+        if edge.bandwidth_Bps is not None and edge.bandwidth_Bps <= 0:
+            # an explicit per-edge override of 0.0 is a config error, not "unset"
+            raise ValueError(
+                f"edge {edge.name!r}: bandwidth override must be positive, "
+                f"got {edge.bandwidth_Bps!r}"
+            )
+        b = bandwidth_Bps if edge.bandwidth_Bps is None else edge.bandwidth_Bps
+        if b is None or b <= 0:
+            # measured bandwidth can hit 0 during an outage: the link is
+            # saturated/dead, so offloading is never preferable this epoch
+            return float(np.inf)
+        # zero-byte payloads mean "no transfer on this leg" (e.g. results
+        # consumed at the edge) — the NIC queue degenerates to zero delay
+        if wl.req_bytes > 0:
+            # line 3: T_net_req <- M/M/1(lambda_dev, B/D_req) + D_req/B
+            t_req = float(mm1_wait(lam_dev, b / wl.req_bytes) + wl.req_bytes / b)
+        else:
+            t_req = 0.0
+        if self.return_results and wl.res_bytes > 0:
+            # line 4: T_net_res <- M/M/1(lambda_edge,E, B/D_res) + D_res/B
+            t_res = float(mm1_wait(edge.arrival_rate, b / wl.res_bytes) + wl.res_bytes / b)
+        else:
+            t_res = 0.0
         # line 6: T_edge,E <- T_req + M/G/1(lambda_E, mu_E) + s_edge + T_res
         w_proc = float(
             mg1_wait(edge.arrival_rate, edge.service_rate, edge.service_var, edge.parallelism_k)

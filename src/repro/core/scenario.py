@@ -1,0 +1,745 @@
+"""Unified, validated `Scenario` spec — the single entry point to the repo.
+
+The paper's pipeline is "describe an operating point -> predict with closed
+forms -> validate with the simulator -> act with Algorithm 1". Before this
+module, each of those consumers re-assembled the operating point its own way
+(tuples into :mod:`latency`, closures into :mod:`crossover`, ``ServiceDist``
+objects into :mod:`simulation`, hand-built ``EdgeServerState`` into
+:mod:`manager`). A :class:`Scenario` is the one declarative description all
+four consume:
+
+    scn = Scenario(workload=..., device=..., network=..., edges=(...,))
+    analytic(scn)            # closed-form LatencyBreakdown per strategy
+    simulate(scn, seed=0)    # discrete-event validation of the same spec
+    crossovers(scn, "bandwidth")   # quantitative crossover queries
+    scn.manager().decide(scn.workload, scn.snapshot(), scn.edge_states())
+
+Validation is eager and FastSim-style ("fail before running"): a bad spec
+raises :class:`ScenarioError` naming the offending field at construction
+time, not ``inf``/NaN half-way through a sweep. The existing low-level
+functions remain the stable kernel layer underneath; nothing here re-derives
+queueing math.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, fields, replace
+from typing import Any, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from . import simulation as S
+from .crossover import (
+    Crossover,
+    arrival_rate_crossovers,
+    bandwidth_crossover,
+    solve_crossover,
+)
+from .latency import (
+    LatencyBreakdown,
+    NetworkPath,
+    ServiceModel,
+    Tier,
+    Workload,
+    edge_offload_latency,
+    on_device_latency,
+)
+from .manager import AdaptiveOffloadManager, EdgeServerState
+from .multitenant import AggregateLoad, TenantStream, aggregate_streams, multitenant_edge_latency
+from .telemetry import TelemetrySnapshot
+
+__all__ = [
+    "ScenarioError",
+    "EdgeSpec",
+    "Scenario",
+    "ScenarioPrediction",
+    "analytic",
+    "simulate",
+    "crossovers",
+    "implied_service_var",
+]
+
+
+def implied_service_var(tier: Tier) -> float:
+    """Var[s] implied by the tier's queueing formulation.
+
+    DETERMINISTIC service has zero variance, EXPONENTIAL has mean^2, GENERAL
+    carries its explicit ``service_var``. Mixture math (multi-tenant
+    aggregates, Algorithm-1 M/G/1 inputs) must use this — feeding ``0`` for
+    an exponential tier would silently downgrade M/M/1 to M/D/1.
+    """
+    if tier.service_model is ServiceModel.EXPONENTIAL:
+        return tier.service_time_s**2
+    if tier.service_model is ServiceModel.GENERAL:
+        return tier.service_var
+    return 0.0
+
+
+class ScenarioError(ValueError):
+    """A scenario spec failed eager validation. ``field`` names the culprit."""
+
+    def __init__(self, field_path: str, message: str):
+        self.field = field_path
+        super().__init__(f"{field_path}: {message}")
+
+
+def _require(cond: bool, field_path: str, message: str) -> None:
+    if not cond:
+        raise ScenarioError(field_path, message)
+
+
+def _coerce_model(value: Any, field_path: str) -> ServiceModel:
+    if isinstance(value, ServiceModel):
+        return value
+    try:
+        return ServiceModel(value)
+    except ValueError:
+        known = ", ".join(m.value for m in ServiceModel)
+        raise ScenarioError(
+            field_path, f"unknown service model {value!r} (known: {known})"
+        ) from None
+
+
+def _validate_tier(tier: Tier, field_path: str) -> Tier:
+    _require(isinstance(tier, Tier), field_path, f"expected a Tier, got {type(tier).__name__}")
+    _require(tier.service_time_s > 0, f"{field_path}.service_time_s",
+             f"must be positive, got {tier.service_time_s!r}")
+    _require(tier.parallelism_k > 0, f"{field_path}.parallelism_k",
+             f"must be positive, got {tier.parallelism_k!r}")
+    _require(tier.service_var >= 0, f"{field_path}.service_var",
+             f"must be non-negative, got {tier.service_var!r}")
+    model = _coerce_model(tier.service_model, f"{field_path}.service_model")
+    return tier if model is tier.service_model else replace(tier, service_model=model)
+
+
+# ---------------------------------------------------------------------------
+# EdgeSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EdgeSpec:
+    """One edge server: its tier plus the background tenants it already hosts.
+
+    ``background`` are the *other* applications multiplexed onto this edge
+    (paper §3.4); the scenario's own workload stream is added automatically
+    wherever the aggregate matters. ``bandwidth_Bps`` overrides the
+    scenario-level network path for this edge only (``0.0`` would be invalid,
+    not "unset" — only ``None`` means "use the shared path").
+    """
+
+    tier: Tier
+    background: tuple[TenantStream, ...] = ()
+    bandwidth_Bps: float | None = None
+
+    def __post_init__(self):
+        if not isinstance(self.background, tuple):
+            object.__setattr__(self, "background", tuple(self.background))
+
+    @property
+    def name(self) -> str:
+        return self.tier.name
+
+    def own_stream(self, wl: Workload) -> TenantStream:
+        """The scenario workload's own stream as this edge would see it.
+
+        Variance is the one the tier's service model implies (s^2 for
+        EXPONENTIAL, 0 for DETERMINISTIC), so adding an epsilon-rate
+        background tenant leaves the M/M/1 prediction continuous instead of
+        discontinuously dropping to the M/D/1 form.
+        """
+        return TenantStream(
+            arrival_rate=wl.arrival_rate,
+            service_mean_s=self.tier.service_time_s,
+            service_var=implied_service_var(self.tier),
+            name=wl.name,
+        )
+
+    def aggregate(self, wl: Workload) -> AggregateLoad:
+        """Mixture moments of background + the scenario's own stream."""
+        return aggregate_streams((self.own_stream(wl),) + self.background)
+
+    def to_state(self, wl: Workload) -> EdgeServerState:
+        """The Algorithm-1 input (``EdgeServerState``) for this edge.
+
+        Mirrors ``serving.gateway.EdgeHandle.state``: the aggregate arrival
+        rate and mixture variance include the workload's own stream, while
+        ``service_time_s`` stays the workload's own service time on this tier
+        (Alg. 1 line 6 uses s_edge of THIS workload).
+        """
+        agg = self.aggregate(wl)
+        return EdgeServerState(
+            name=self.tier.name,
+            service_rate=agg.service_rate,
+            arrival_rate=agg.arrival_rate,
+            service_time_s=self.tier.service_time_s,
+            service_var=agg.service_var,
+            parallelism_k=self.tier.parallelism_k,
+            bandwidth_Bps=self.bandwidth_Bps,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Scenario
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A complete, validated operating point (device + edges + network + load).
+
+    Frozen and eagerly validated: positivity of every rate/size, per-queue
+    stability (device proc, device NIC, each edge's aggregate proc + NIC),
+    and service-model sanity all fail at construction with the offending
+    field named. Set ``allow_unstable=True`` for specs that deliberately
+    cross stability boundaries (saturation studies, wide sweeps) — the
+    closed forms then return ``inf`` there, exactly as the kernel layer does.
+    """
+
+    workload: Workload
+    device: Tier
+    network: NetworkPath
+    edges: tuple[EdgeSpec, ...] = ()
+    return_results: bool = True
+    allow_unstable: bool = False
+    name: str = "scenario"
+
+    def __post_init__(self):
+        if not isinstance(self.edges, tuple):
+            object.__setattr__(self, "edges", tuple(self.edges))
+        self._validate()
+
+    # -- validation (FastSim-style: fail before running) ---------------------
+    def _validate(self) -> None:
+        wl, dev, net = self.workload, self.device, self.network
+        _require(isinstance(wl, Workload), "workload",
+                 f"expected a Workload, got {type(wl).__name__}")
+        _require(wl.arrival_rate > 0, "workload.arrival_rate",
+                 f"must be positive, got {wl.arrival_rate!r}")
+        _require(wl.req_bytes > 0, "workload.req_bytes",
+                 f"must be positive, got {wl.req_bytes!r}")
+        _require(wl.res_bytes >= 0, "workload.res_bytes",
+                 f"must be non-negative, got {wl.res_bytes!r}")
+        _require(isinstance(net, NetworkPath), "network",
+                 f"expected a NetworkPath, got {type(net).__name__}")
+        _require(float(np.asarray(net.bandwidth_Bps)) > 0, "network.bandwidth_Bps",
+                 f"must be positive, got {net.bandwidth_Bps!r}")
+
+        coerced = _validate_tier(dev, "device")
+        if coerced is not dev:
+            object.__setattr__(self, "device", coerced)
+
+        new_edges = []
+        for i, e in enumerate(self.edges):
+            path = f"edges[{i}]"
+            _require(isinstance(e, EdgeSpec), path,
+                     f"expected an EdgeSpec, got {type(e).__name__}")
+            tier = _validate_tier(e.tier, f"{path}.tier")
+            if e.bandwidth_Bps is not None:
+                _require(e.bandwidth_Bps > 0, f"{path}.bandwidth_Bps",
+                         f"must be positive (use None for 'unset'), got {e.bandwidth_Bps!r}")
+            for j, t in enumerate(e.background):
+                bpath = f"{path}.background[{j}]"
+                _require(t.arrival_rate > 0, f"{bpath}.arrival_rate",
+                         f"must be positive, got {t.arrival_rate!r}")
+                _require(t.service_mean_s > 0, f"{bpath}.service_mean_s",
+                         f"must be positive, got {t.service_mean_s!r}")
+                _require(t.service_var >= 0, f"{bpath}.service_var",
+                         f"must be non-negative, got {t.service_var!r}")
+            new_edges.append(e if tier is e.tier else replace(e, tier=tier))
+        if any(a is not b for a, b in zip(new_edges, self.edges)):
+            object.__setattr__(self, "edges", tuple(new_edges))
+
+        if not self.allow_unstable:
+            self._validate_stability()
+
+    def _validate_stability(self) -> None:
+        wl, dev = self.workload, self.device
+        lam = wl.arrival_rate
+        kmu_dev = dev.parallelism_k / dev.service_time_s
+        _require(lam < kmu_dev, "device",
+                 f"unstable: arrival_rate {lam} >= k*mu {kmu_dev:.4g} "
+                 "(set allow_unstable=True to permit)")
+        for i, e in enumerate(self.edges):
+            path = f"edges[{i}]"
+            net = self.network_for(e)
+            b = float(np.asarray(net.bandwidth_Bps))
+            _require(lam < b / wl.req_bytes, f"{path}.bandwidth_Bps" if e.bandwidth_Bps
+                     is not None else "network.bandwidth_Bps",
+                     f"device NIC unstable: arrival_rate {lam} >= B/D_req "
+                     f"{b / wl.req_bytes:.4g} (set allow_unstable=True to permit)")
+            agg = e.aggregate(wl)
+            kmu_e = e.tier.parallelism_k * agg.service_rate
+            _require(agg.arrival_rate < kmu_e, path,
+                     f"unstable: aggregate arrival_rate {agg.arrival_rate:.4g} >= "
+                     f"k*mu {kmu_e:.4g} (set allow_unstable=True to permit)")
+            if self.return_results and wl.res_bytes > 0:
+                _require(agg.arrival_rate < b / wl.res_bytes, path,
+                         f"edge NIC unstable: aggregate arrival_rate "
+                         f"{agg.arrival_rate:.4g} >= B/D_res {b / wl.res_bytes:.4g} "
+                         "(set allow_unstable=True to permit)")
+
+    # -- serialisation --------------------------------------------------------
+    def to_dict(self) -> dict:
+        """Plain-JSON dict; ``from_dict(to_dict(scn)) == scn`` (``Tier.meta``
+        is session-local and intentionally not serialised)."""
+
+        def tier_d(t: Tier) -> dict:
+            return {
+                "name": t.name,
+                "service_time_s": t.service_time_s,
+                "parallelism_k": t.parallelism_k,
+                "service_model": t.service_model.value,
+                "service_var": t.service_var,
+            }
+
+        return {
+            "name": self.name,
+            "workload": {
+                "arrival_rate": self.workload.arrival_rate,
+                "req_bytes": self.workload.req_bytes,
+                "res_bytes": self.workload.res_bytes,
+                "name": self.workload.name,
+            },
+            "device": tier_d(self.device),
+            "network": {"bandwidth_Bps": self.network.bandwidth_Bps},
+            "edges": [
+                {
+                    "tier": tier_d(e.tier),
+                    "background": [
+                        {
+                            "arrival_rate": t.arrival_rate,
+                            "service_mean_s": t.service_mean_s,
+                            "service_var": t.service_var,
+                            "name": t.name,
+                        }
+                        for t in e.background
+                    ],
+                    "bandwidth_Bps": e.bandwidth_Bps,
+                }
+                for e in self.edges
+            ],
+            "return_results": self.return_results,
+            "allow_unstable": self.allow_unstable,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Scenario":
+        """Inverse of :meth:`to_dict`. Missing required fields and unknown
+        service-model strings raise :class:`ScenarioError` naming the field."""
+
+        def get(m: Mapping, key: str, path: str):
+            try:
+                return m[key]
+            except (KeyError, TypeError):
+                raise ScenarioError(f"{path}.{key}" if path else key,
+                                    "missing required field") from None
+
+        def tier_f(td: Mapping, path: str) -> Tier:
+            return Tier(
+                name=td.get("name", "tier"),
+                service_time_s=get(td, "service_time_s", path),
+                parallelism_k=td.get("parallelism_k", 1.0),
+                service_model=_coerce_model(td.get("service_model", "md1"),
+                                            f"{path}.service_model"),
+                service_var=td.get("service_var", 0.0),
+            )
+
+        wl_d = get(d, "workload", "")
+        dev_d = get(d, "device", "")
+        net_d = get(d, "network", "")
+        return cls(
+            workload=Workload(
+                arrival_rate=get(wl_d, "arrival_rate", "workload"),
+                req_bytes=get(wl_d, "req_bytes", "workload"),
+                res_bytes=get(wl_d, "res_bytes", "workload"),
+                name=wl_d.get("name", "workload"),
+            ),
+            device=tier_f(dev_d, "device"),
+            network=NetworkPath(bandwidth_Bps=get(net_d, "bandwidth_Bps", "network")),
+            edges=tuple(
+                EdgeSpec(
+                    tier=tier_f(get(ed, "tier", f"edges[{i}]"), f"edges[{i}].tier"),
+                    background=tuple(
+                        TenantStream(
+                            arrival_rate=get(td, "arrival_rate",
+                                             f"edges[{i}].background[{j}]"),
+                            service_mean_s=get(td, "service_mean_s",
+                                               f"edges[{i}].background[{j}]"),
+                            service_var=td.get("service_var", 0.0),
+                            name=td.get("name", "tenant"),
+                        )
+                        for j, td in enumerate(ed.get("background", []))
+                    ),
+                    bandwidth_Bps=ed.get("bandwidth_Bps"),
+                )
+                for i, ed in enumerate(d.get("edges", []))
+            ),
+            return_results=d.get("return_results", True),
+            allow_unstable=d.get("allow_unstable", False),
+            name=d.get("name", "scenario"),
+        )
+
+    # -- sweeps ---------------------------------------------------------------
+    def replaced(self, field_path: str, value: Any) -> "Scenario":
+        """A copy with the dotted/indexed ``field_path`` set to ``value``
+        (e.g. ``"network.bandwidth_Bps"``, ``"edges[0].tier.service_time_s"``).
+        Re-validates eagerly like any construction."""
+        parts = _parse_path(field_path)
+        return _set_path(self, parts, value, field_path)
+
+    def sweep(self, field_path: str, values: Iterable) -> list["Scenario"]:
+        """A family of scenarios varying one field — the vectorised form every
+        figure-style experiment uses. Sweeps routinely cross stability
+        boundaries on purpose, so swept copies carry ``allow_unstable=True``
+        and the closed forms report ``inf`` past saturation."""
+        base = self if self.allow_unstable else replace(self, allow_unstable=True)
+        return [base.replaced(field_path, v) for v in values]
+
+    # -- consumer constructors -------------------------------------------------
+    def network_for(self, edge: EdgeSpec) -> NetworkPath:
+        return (
+            self.network
+            if edge.bandwidth_Bps is None
+            else NetworkPath(bandwidth_Bps=edge.bandwidth_Bps)
+        )
+
+    def edge_states(self) -> tuple[EdgeServerState, ...]:
+        """Algorithm-1 inputs for every edge, derived from this one spec."""
+        return tuple(e.to_state(self.workload) for e in self.edges)
+
+    def snapshot(
+        self,
+        time_s: float = 0.0,
+        *,
+        bandwidth_Bps: float | None = None,
+        arrival_rate: float | None = None,
+    ) -> TelemetrySnapshot:
+        """A telemetry snapshot of this operating point (overridable for
+        replaying schedules like the paper's Fig. 6 bandwidth trace)."""
+        return TelemetrySnapshot(
+            time_s=time_s,
+            lam_dev=self.workload.arrival_rate if arrival_rate is None else arrival_rate,
+            bandwidth_Bps=float(np.asarray(
+                self.network.bandwidth_Bps if bandwidth_Bps is None else bandwidth_Bps
+            )),
+        )
+
+    def manager(self, **kwargs) -> AdaptiveOffloadManager:
+        """An :class:`AdaptiveOffloadManager` for this scenario's device tier
+        (``hysteresis=``/``tail_z=`` pass through; ``return_results``
+        defaults to this scenario's setting so Algorithm 1 models the same
+        network legs as :func:`analytic`)."""
+        kwargs.setdefault("return_results", self.return_results)
+        return AdaptiveOffloadManager(self.device, **kwargs)
+
+    # -- method sugar for the module-level consumers ---------------------------
+    def analytic(self) -> "ScenarioPrediction":
+        return analytic(self)
+
+    def simulate(self, strategy: str | None = None, **kwargs) -> S.SimResult:
+        return simulate(self, strategy, **kwargs)
+
+    def crossovers(self, axis: str, **kwargs) -> Crossover:
+        return crossovers(self, axis, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# field-path parsing for replaced()/sweep()
+# ---------------------------------------------------------------------------
+
+_PATH_TOKEN = re.compile(r"([A-Za-z_][A-Za-z_0-9]*)((?:\[\d+\])*)$")
+
+
+def _parse_path(field_path: str) -> list:
+    parts: list = []
+    for token in field_path.split("."):
+        m = _PATH_TOKEN.match(token)
+        if not m:
+            raise ScenarioError(field_path, f"malformed field path segment {token!r}")
+        parts.append(m.group(1))
+        for idx in re.findall(r"\[(\d+)\]", m.group(2)):
+            parts.append(int(idx))
+    return parts
+
+
+def _set_path(obj: Any, parts: Sequence, value: Any, full_path: str) -> Any:
+    if not parts:
+        return value
+    head, rest = parts[0], parts[1:]
+    if isinstance(head, int):
+        seq = list(obj)
+        if not 0 <= head < len(seq):
+            raise ScenarioError(full_path, f"index {head} out of range (len {len(seq)})")
+        seq[head] = _set_path(seq[head], rest, value, full_path)
+        return tuple(seq)
+    if not hasattr(obj, head) or head not in {f.name for f in fields(obj)}:
+        raise ScenarioError(full_path, f"{type(obj).__name__} has no field {head!r}")
+    return replace(obj, **{head: _set_path(getattr(obj, head), rest, value, full_path)})
+
+
+# ---------------------------------------------------------------------------
+# analytic(scn): closed-form prediction per strategy
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ScenarioPrediction:
+    """Closed-form :class:`LatencyBreakdown` per strategy of one scenario.
+
+    Keys are ``"on_device"`` and ``"edge[i]"`` (matching
+    ``Decision.target_name``); ``best_strategy`` is the analytic argmin.
+    """
+
+    breakdowns: dict[str, LatencyBreakdown]
+
+    def __getitem__(self, strategy: str) -> LatencyBreakdown:
+        return self.breakdowns[strategy]
+
+    def __iter__(self):
+        return iter(self.breakdowns)
+
+    def items(self):
+        return self.breakdowns.items()
+
+    def totals(self) -> dict[str, float]:
+        return {k: float(np.asarray(b.total)) for k, b in self.breakdowns.items()}
+
+    @property
+    def best_strategy(self) -> str:
+        totals = self.totals()
+        return min(totals, key=totals.get)
+
+    @property
+    def best(self) -> LatencyBreakdown:
+        return self.breakdowns[self.best_strategy]
+
+
+def analytic(scn: Scenario) -> ScenarioPrediction:
+    """Paper Eq. 1/2 (+ Lemma 3.2 multi-tenant form) for every strategy.
+
+    Wraps the kernel layer exactly: ``on_device_latency`` for the device,
+    ``edge_offload_latency`` for a dedicated edge, and
+    ``multitenant_edge_latency`` when the edge hosts background tenants.
+    """
+    out: dict[str, LatencyBreakdown] = {
+        "on_device": on_device_latency(scn.workload, scn.device, breakdown=True)
+    }
+    for i, e in enumerate(scn.edges):
+        net = scn.network_for(e)
+        if e.background:
+            b = multitenant_edge_latency(
+                scn.workload, e.tier, net,
+                (e.own_stream(scn.workload),) + e.background,
+                return_results=scn.return_results, breakdown=True,
+            )
+        else:
+            b = edge_offload_latency(
+                scn.workload, e.tier, net,
+                return_results=scn.return_results, breakdown=True,
+            )
+        out[f"edge[{i}]"] = b
+    return ScenarioPrediction(out)
+
+
+# ---------------------------------------------------------------------------
+# simulate(scn): the same spec through the discrete-event testbed
+# ---------------------------------------------------------------------------
+
+
+def _service_dist(tier: Tier) -> S.ServiceDist:
+    if tier.service_model is ServiceModel.DETERMINISTIC:
+        return S.Deterministic(tier.service_time_s)
+    if tier.service_model is ServiceModel.EXPONENTIAL:
+        return S.Exponential(tier.service_time_s)
+    return S.LogNormal(tier.service_time_s, tier.service_var)
+
+
+def _tenant_dist(t: TenantStream) -> S.ServiceDist:
+    return (
+        S.Deterministic(t.service_mean_s)
+        if t.service_var == 0
+        else S.LogNormal(t.service_mean_s, t.service_var)
+    )
+
+
+def _resolve_strategy(scn: Scenario, strategy: str | None) -> tuple[str, int]:
+    if strategy is None:
+        strategy = "edge[0]" if scn.edges else "on_device"
+    if strategy == "on_device":
+        return strategy, -1
+    m = re.fullmatch(r"edge\[(\d+)\]", strategy)
+    if not m or int(m.group(1)) >= len(scn.edges):
+        known = ["on_device"] + [f"edge[{i}]" for i in range(len(scn.edges))]
+        raise ScenarioError("strategy", f"unknown strategy {strategy!r} (known: {known})")
+    return strategy, int(m.group(1))
+
+
+def _integer_k(tier: Tier, field_path: str) -> int:
+    """The simulator runs k discrete servers; the closed forms fold k into
+    k*mu and allow fractional k (§3.5). Refuse to silently simulate a
+    different system than the one being predicted."""
+    k = tier.parallelism_k
+    if round(k) != k:
+        raise ScenarioError(
+            f"{field_path}.parallelism_k",
+            f"fractional parallelism {k!r} cannot be simulated exactly "
+            "(discrete servers); round it or compare via analytic() only",
+        )
+    return max(1, int(k))
+
+
+def simulate(
+    scn: Scenario,
+    strategy: str | None = None,
+    *,
+    seed: int = 0,
+    n: int = 100_000,
+) -> S.SimResult:
+    """Discrete-event simulation of ``scn`` under ``strategy``.
+
+    Derives the right ``ServiceDist`` from each tier's ``ServiceModel``
+    (deterministic / exponential / lognormal-general) and the right network
+    stages from the spec, so prediction and validation can never drift apart
+    on inputs (fractional ``parallelism_k`` is refused rather than silently
+    rounded). ``strategy`` defaults to ``"edge[0]"`` when edges exist, else
+    ``"on_device"``; multi-tenant edges use the shared-station simulator with
+    the scenario's own stream observed.
+    """
+    strategy, idx = _resolve_strategy(scn, strategy)
+    wl = scn.workload
+    if strategy == "on_device":
+        return S.simulate_on_device(
+            wl.arrival_rate,
+            _service_dist(scn.device),
+            k=_integer_k(scn.device, "device"),
+            n=n,
+            seed=seed,
+        )
+    e = scn.edges[idx]
+    net = scn.network_for(e)
+    b = float(np.asarray(net.bandwidth_Bps))
+    k_edge = _integer_k(e.tier, f"edges[{idx}].tier")
+    if not e.background:
+        return S.simulate_offload(
+            wl.arrival_rate,
+            _service_dist(e.tier),
+            k_edge,
+            bandwidth_Bps=b,
+            req_bytes=wl.req_bytes,
+            res_bytes=wl.res_bytes if scn.return_results else 0.0,
+            n=n,
+            seed=seed,
+        )
+    streams = [(wl.arrival_rate, _service_dist(e.tier))] + [
+        (t.arrival_rate, _tenant_dist(t)) for t in e.background
+    ]
+    # rate-proportional counts -> every stream spans the same time horizon,
+    # so the observed stream never sees a partially-drained edge
+    lam_total = sum(rate for rate, _ in streams)
+    horizon = max(n, 2_000 * len(streams)) / lam_total
+    counts = [max(1, int(round(rate * horizon))) for rate, _ in streams]
+    return S.simulate_multitenant_offload(
+        streams,
+        k_edge,
+        bandwidth_Bps=b,
+        req_bytes=wl.req_bytes,
+        res_bytes=wl.res_bytes if scn.return_results else 0.0,
+        observe_stream=0,
+        n_per_stream=counts,
+        seed=seed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# crossovers(scn, axis): quantitative crossover queries
+# ---------------------------------------------------------------------------
+
+
+def crossovers(scn: Scenario, axis: str, *, edge: int = 0, **kwargs) -> Crossover:
+    """Where does the preferred strategy flip along ``axis``?
+
+    ``axis``: ``"bandwidth"`` (Fig. 4), ``"arrival_rate"`` (Fig. 5b; first
+    crossover — they need not be unique), or ``"tenancy"`` (Fig. 5c; value is
+    the smallest tenant count m at which on-device wins). Replaces the
+    hand-rolled closures callers used to feed :mod:`crossover` — the solvers
+    there stay the kernel layer. Edges with background tenants are compared
+    via the multi-tenant (M/G/1) latency, so the answer always agrees with
+    ``analytic`` on the same spec.
+    """
+    _require(bool(scn.edges), "edges", "crossover queries need at least one edge")
+    _require(0 <= edge < len(scn.edges), "edges", f"edge index {edge} out of range")
+    e = scn.edges[edge]
+    wl, dev = scn.workload, scn.device
+
+    def multitenant_diff(wl_at: Workload, net: NetworkPath) -> float:
+        streams = (e.own_stream(wl_at),) + e.background
+        te = float(np.asarray(multitenant_edge_latency(
+            wl_at, e.tier, net, streams, return_results=scn.return_results)))
+        return te - float(np.asarray(on_device_latency(wl_at, dev)))
+
+    if axis == "bandwidth":
+        if e.background:
+            lo = kwargs.pop("lo_Bps", 1e4)
+            hi = kwargs.pop("hi_Bps", 1e9)
+            return solve_crossover(
+                lambda b: multitenant_diff(wl, NetworkPath(b)), lo, hi, **kwargs
+            )
+        return bandwidth_crossover(
+            wl, dev, e.tier, return_results=scn.return_results, **kwargs
+        )
+    if axis == "arrival_rate":
+        if e.background:
+            net = scn.network_for(e)
+            b = float(np.asarray(net.bandwidth_Bps))
+            lo = kwargs.pop("lo", 0.01)
+            # stay inside the device/NIC stability region; edge saturation
+            # shows up as inf and is filtered by the solver's finite scan
+            caps = [dev.parallelism_k / dev.service_time_s, b / wl.req_bytes]
+            hi = kwargs.pop("hi", None) or 0.999 * min(caps)
+            if hi <= lo:
+                return Crossover(None, None, lo, hi)
+            return solve_crossover(
+                lambda lam: multitenant_diff(replace(wl, arrival_rate=lam), net),
+                lo, hi, **kwargs,
+            )
+        xs = arrival_rate_crossovers(
+            wl, dev, e.tier, scn.network_for(e),
+            return_results=scn.return_results, **kwargs
+        )
+        return xs[0] if xs else Crossover(None, None, 0.0, 0.0)
+    if axis == "tenancy":
+        max_tenants = kwargs.pop("max_tenants", 1024)
+        template = kwargs.pop("tenant_template", None) or (
+            e.background[0] if e.background else e.own_stream(wl)
+        )
+        if kwargs:
+            raise TypeError(
+                f"unexpected keyword arguments for tenancy axis: {sorted(kwargs)}"
+            )
+        # m counts ALL tenants on the edge including the scenario's own
+        # stream: T_edge(m) = own + (m-1) template copies. In the paper's
+        # homogeneous setup (no background, template == own stream) this is
+        # exactly tenancy_crossover's [template]*m; unlike that kernel form
+        # it never drops the own stream when a template is supplied, so the
+        # answer agrees with analytic() on the corresponding spec.
+        net = scn.network_for(e)
+        td = float(np.asarray(on_device_latency(wl, dev)))
+        m_star = None
+        for m in range(1, max_tenants + 1):
+            streams = (e.own_stream(wl),) + (template,) * (m - 1)
+            te = float(np.asarray(multitenant_edge_latency(
+                wl, e.tier, net, streams, return_results=scn.return_results)))
+            if te > td:
+                m_star = m
+                break
+        return Crossover(
+            value=None if m_star is None else float(m_star),
+            offload_wins_above=None if m_star is None else False,
+            lo=1.0,
+            hi=float(max_tenants),
+        )
+    raise ScenarioError(
+        "axis", f"unknown axis {axis!r} (known: bandwidth, arrival_rate, tenancy)"
+    )

@@ -328,7 +328,7 @@ def simulate_multitenant_offload(
     req_bytes: float,
     res_bytes: float,
     observe_stream: int = 0,
-    n_per_stream: int = 20_000,
+    n_per_stream: int | Sequence[int] = 20_000,
     seed: int = 0,
 ) -> SimResult:
     """m devices offloading to one shared edge (paper §3.4 figure).
@@ -337,12 +337,23 @@ def simulate_multitenant_offload(
     NIC; the edge processing station is shared (no isolation); the edge NIC
     return path carries all completions. Latencies are reported for
     ``observe_stream`` (plus all streams via stream_ids).
+
+    ``n_per_stream`` may be a per-stream sequence: with heterogeneous rates,
+    equal counts give unequal time horizons (fast streams drain early and the
+    slow ones' tails see an underloaded edge) — scale counts by rate to keep
+    a common horizon.
     """
     rng = np.random.default_rng(seed)
+    if isinstance(n_per_stream, int):
+        counts = [n_per_stream] * len(streams)
+    else:
+        counts = list(n_per_stream)
+        if len(counts) != len(streams):
+            raise ValueError("n_per_stream sequence must match streams length")
     per_stream_after_nic: list[np.ndarray] = []
     arrivals_per_stream: list[np.ndarray] = []
-    for lam, _dist in streams:
-        arr = poisson_arrivals(lam, n_per_stream, rng)
+    for (lam, _dist), cnt in zip(streams, counts):
+        arr = poisson_arrivals(lam, cnt, rng)
         arrivals_per_stream.append(arr)
         nic = Exponential(req_bytes / bandwidth_Bps)
         dep = station_pass(arr, nic.sample(len(arr), rng), 1)

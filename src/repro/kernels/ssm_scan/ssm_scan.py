@@ -54,11 +54,7 @@ def ssm_scan_kernel(
         decay = jnp.exp(dt_t[:, None] * a)  # (blk_d, N)
         h = decay * h + (dt_t * u_t)[:, None] * b_t[None, :]
         y_t = jnp.sum(h * c_t[None, :], axis=1)  # (blk_d,)
-        pl.store(
-            y_ref,
-            (0, pl.dslice(t, 1), slice(None)),
-            y_t[None].astype(y_ref.dtype),
-        )
+        y_ref[pl.dslice(0, 1), pl.dslice(t, 1), :] = y_t[None, None].astype(y_ref.dtype)
         return h
 
     h = jax.lax.fori_loop(0, blk_t, step, h_ref[...])

@@ -35,11 +35,44 @@ class EdgeHandle:
     name: str
     service_mean_s: float  # current estimate for THIS workload on the edge
     parallelism_k: float = 1.0
+    service_var_s: float = 0.0  # Var[s] of THIS workload's service on the edge
     background_rate: float = 0.0  # other tenants' aggregate lambda (obs.)
     background_service_s: float = 0.0
     background_service_var: float = 0.0
+    bandwidth_Bps: float | None = None  # per-edge path override (else device B)
     arrivals: SlidingRateEstimator = field(default_factory=lambda: SlidingRateEstimator(30.0))
     service: WindowedMoments = field(default_factory=WindowedMoments)
+
+    @classmethod
+    def from_spec(cls, spec) -> "EdgeHandle":
+        """Build a handle from a declarative ``repro.core.EdgeSpec`` — the
+        spec's background tenants seed the handle's load/mixture estimates,
+        which live telemetry then updates, and the own-stream variance is the
+        one the tier's service model implies (matching ``analytic()``).
+
+        Note the arrival-rate semantics differ from ``EdgeSpec.to_state()``
+        by design: the gateway models the edge's *observed* load, so the own
+        stream only enters the aggregate once requests are actually routed
+        there (``arrivals`` estimator), whereas ``to_state()`` answers the
+        declarative what-if with the own stream always included."""
+        from repro.core.multitenant import aggregate_streams
+        from repro.core.scenario import implied_service_var
+
+        if spec.background:
+            agg = aggregate_streams(spec.background)
+            bg_rate, bg_mean, bg_var = agg.arrival_rate, agg.service_mean_s, agg.service_var
+        else:
+            bg_rate, bg_mean, bg_var = 0.0, 0.0, 0.0
+        return cls(
+            name=spec.tier.name,
+            service_mean_s=spec.tier.service_time_s,
+            parallelism_k=spec.tier.parallelism_k,
+            service_var_s=implied_service_var(spec.tier),
+            background_rate=bg_rate,
+            background_service_s=bg_mean,
+            background_service_var=bg_var,
+            bandwidth_Bps=spec.bandwidth_Bps,
+        )
 
     def state(self, wl_service_mean: float | None = None) -> EdgeServerState:
         mine = wl_service_mean if wl_service_mean is not None else self.service_mean_s
@@ -52,10 +85,10 @@ class EdgeHandle:
             mean = w_bg * self.background_service_s + (1 - w_bg) * mine
             second = w_bg * (
                 self.background_service_var + self.background_service_s**2
-            ) + (1 - w_bg) * (mine**2)
+            ) + (1 - w_bg) * (self.service_var_s + mine**2)
             var = max(0.0, second - mean**2)
         else:
-            mean, var = mine, 0.0
+            mean, var = mine, self.service_var_s
         return EdgeServerState(
             name=self.name,
             service_rate=1.0 / max(mean, 1e-9),
@@ -63,6 +96,7 @@ class EdgeHandle:
             service_time_s=mine,
             service_var=var,
             parallelism_k=self.parallelism_k,
+            bandwidth_Bps=self.bandwidth_Bps,
         )
 
 
@@ -78,18 +112,35 @@ class OffloadGateway:
         bandwidth_Bps: float,
         epoch_s: float = 1.0,
         hysteresis: float = 0.0,
+        return_results: bool = True,
         deadline_timeout: Callable[[float], float] | None = None,
     ):
         self.device = device_tier
         self.edges = list(edges)
         self.wl = wl
         self.epoch_s = epoch_s
-        self.manager = AdaptiveOffloadManager(device_tier, hysteresis=hysteresis)
+        self.manager = AdaptiveOffloadManager(
+            device_tier, hysteresis=hysteresis, return_results=return_results
+        )
         self.bandwidth = EwmaEstimator(alpha=0.5, initial=bandwidth_Bps)
         self.arrivals = SlidingRateEstimator(window_s=30.0)
         self.decisions: list[Decision] = []
         self.deadline_timeout = deadline_timeout
         self.redispatches = 0
+
+    @classmethod
+    def from_scenario(cls, scn, **kwargs) -> "OffloadGateway":
+        """Build the deployable gateway from the same validated
+        ``repro.core.Scenario`` that drives ``analytic``/``simulate`` — no
+        per-consumer re-assembly of tiers, handles, or bandwidths."""
+        kwargs.setdefault("return_results", scn.return_results)
+        return cls(
+            scn.device,
+            [EdgeHandle.from_spec(e) for e in scn.edges],
+            scn.workload,
+            bandwidth_Bps=float(np.asarray(scn.network.bandwidth_Bps)),
+            **kwargs,
+        )
 
     # -- telemetry inputs ---------------------------------------------------
     def observe_bandwidth(self, measured_Bps: float) -> None:

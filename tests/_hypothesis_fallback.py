@@ -1,0 +1,82 @@
+"""Deterministic stand-in for the tiny slice of `hypothesis` these tests use.
+
+The container image does not ship hypothesis; rather than skip the property
+tests entirely we run each one over a fixed pseudo-random sample of the same
+strategy space (seeded, so failures reproduce). When hypothesis IS installed
+the real library is used instead — see the try/except import in each test
+module.
+"""
+
+from __future__ import annotations
+
+import random
+
+_MAX_EXAMPLES = 25  # fallback cap; the real library honours the caller's value
+
+
+class _Strategy:
+    """A value generator with hypothesis-style `.filter()` chaining."""
+
+    def __init__(self, gen):
+        self._gen = gen
+        self._filters = []
+
+    def filter(self, pred):
+        s = _Strategy(self._gen)
+        s._filters = self._filters + [pred]
+        return s
+
+    def example(self, rng: random.Random):
+        for _ in range(10_000):
+            v = self._gen(rng)
+            if all(f(v) for f in self._filters):
+                return v
+        raise ValueError("strategy filter rejected every sample")
+
+
+def floats(lo, hi):
+    return _Strategy(lambda r: r.uniform(lo, hi))
+
+
+def integers(lo, hi):
+    return _Strategy(lambda r: r.randint(lo, hi))
+
+
+def sampled_from(seq):
+    options = list(seq)
+    return _Strategy(lambda r: options[r.randrange(len(options))])
+
+
+def tuples(*strategies):
+    return _Strategy(lambda r: tuple(s.example(r) for s in strategies))
+
+
+def lists(strategy, min_size=0, max_size=10):
+    return _Strategy(
+        lambda r: [strategy.example(r) for _ in range(r.randint(min_size, max_size))]
+    )
+
+
+def settings(max_examples=_MAX_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = min(getattr(fn, "_fallback_max_examples", _MAX_EXAMPLES), _MAX_EXAMPLES)
+            rng = random.Random(0)
+            for _ in range(n):
+                fn(*args, *(s.example(rng) for s in strategies), **kwargs)
+
+        # deliberately NOT functools.wraps: pytest must see the wrapper's
+        # (self)-only signature, or it treats strategy params as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

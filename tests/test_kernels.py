@@ -1,12 +1,18 @@
 """Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
-swept over shapes/dtypes (+ hypothesis for the pointwise kernels)."""
+swept over shapes/dtypes (+ hypothesis for the pointwise kernels; a seeded
+local fallback sweep keeps coverage when hypothesis is not installed)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    import _hypothesis_fallback as st
+    from _hypothesis_fallback import given, settings
 
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_reference

@@ -2,8 +2,13 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    import _hypothesis_fallback as st
+    from _hypothesis_fallback import given, settings
 
 from repro.core.latency import (
     NetworkPath,

@@ -1,0 +1,445 @@
+"""The unified `Scenario` spec: round-trip, eager named-field validation, and
+exact agreement with the kernel-layer functions it wraps (plus sim MAPE at
+the tolerance test_simulation_validation already enforces)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.crossover import bandwidth_crossover
+from repro.core.latency import (
+    NetworkPath,
+    ServiceModel,
+    Tier,
+    Workload,
+    edge_offload_latency,
+    on_device_latency,
+)
+from repro.core.manager import ON_DEVICE, AdaptiveOffloadManager
+from repro.core.multitenant import TenantStream, multitenant_edge_latency
+from repro.core.scenario import (
+    EdgeSpec,
+    Scenario,
+    ScenarioError,
+    analytic,
+    crossovers,
+    simulate,
+)
+from repro.serving.gateway import OffloadGateway
+
+
+def make_scenario(**kw) -> Scenario:
+    defaults = dict(
+        workload=Workload(10.0, 25_000, 2_000, name="camera"),
+        device=Tier("jetson", 0.035, service_model=ServiceModel.DETERMINISTIC),
+        network=NetworkPath(20e6 / 8),
+        edges=(
+            EdgeSpec(Tier("edge-gpu", 0.005, parallelism_k=2)),
+            EdgeSpec(
+                Tier("edge-llm", 0.008, service_model=ServiceModel.EXPONENTIAL),
+                background=(TenantStream(3.0, 0.012, 1e-6, name="bg"),),
+                bandwidth_Bps=5e6,
+            ),
+        ),
+        name="fixture",
+    )
+    defaults.update(kw)
+    return Scenario(**defaults)
+
+
+class TestRoundTrip:
+    def test_from_dict_to_dict_roundtrips_exactly(self):
+        scn = make_scenario()
+        assert Scenario.from_dict(scn.to_dict()) == scn
+
+    def test_dict_is_plain_json(self):
+        scn = make_scenario()
+        assert Scenario.from_dict(json.loads(json.dumps(scn.to_dict()))) == scn
+
+    def test_roundtrip_preserves_flags_and_models(self):
+        scn = make_scenario(return_results=False, allow_unstable=True)
+        back = Scenario.from_dict(scn.to_dict())
+        assert back == scn
+        assert back.edges[1].tier.service_model is ServiceModel.EXPONENTIAL
+        assert back.edges[1].bandwidth_Bps == 5e6
+        assert back.edges[0].bandwidth_Bps is None
+
+    def test_service_model_accepts_value_strings(self):
+        # a spec written by hand with "mm1" strings coerces to the enum
+        scn = make_scenario(device=Tier("d", 0.01, service_model="mm1"))
+        assert scn.device.service_model is ServiceModel.EXPONENTIAL
+
+
+class TestValidation:
+    @pytest.mark.parametrize(
+        "kw,field",
+        [
+            (dict(workload=Workload(-1.0, 1e4, 1e3)), "workload.arrival_rate"),
+            (dict(workload=Workload(1.0, -5.0, 1e3)), "workload.req_bytes"),
+            (dict(workload=Workload(1.0, 1e4, -1.0)), "workload.res_bytes"),
+            (dict(network=NetworkPath(0.0)), "network.bandwidth_Bps"),
+            (dict(device=Tier("d", -0.1)), "device.service_time_s"),
+            (dict(device=Tier("d", 0.01, parallelism_k=0)), "device.parallelism_k"),
+            (dict(edges=(EdgeSpec(Tier("e", 0.005), bandwidth_Bps=0.0),)),
+             "edges[0].bandwidth_Bps"),
+            (dict(edges=(EdgeSpec(Tier("e", 0.005),
+                                  background=(TenantStream(-2.0, 0.01),)),)),
+             "edges[0].background[0].arrival_rate"),
+        ],
+    )
+    def test_invalid_specs_name_the_field(self, kw, field):
+        with pytest.raises(ScenarioError) as ei:
+            make_scenario(**kw)
+        assert ei.value.field == field
+        assert field in str(ei.value)
+
+    def test_unstable_device_rejected_eagerly(self):
+        # lam >= k*mu: 100 rps into a 20 rps device
+        with pytest.raises(ScenarioError) as ei:
+            make_scenario(workload=Workload(100.0, 1e4, 1e3))
+        assert ei.value.field == "device"
+        assert "unstable" in str(ei.value)
+
+    def test_unstable_edge_aggregate_rejected_eagerly(self):
+        heavy = (TenantStream(200.0, 0.02),)
+        with pytest.raises(ScenarioError) as ei:
+            make_scenario(edges=(EdgeSpec(Tier("e", 0.005), background=heavy),))
+        assert ei.value.field == "edges[0]"
+
+    def test_allow_unstable_permits_saturation_studies(self):
+        scn = make_scenario(workload=Workload(100.0, 1e4, 1e3), allow_unstable=True)
+        assert float(analytic(scn)["on_device"].total) == np.inf
+
+    def test_unknown_service_model_string(self):
+        d = make_scenario().to_dict()
+        d["device"]["service_model"] = "g/g/1"
+        with pytest.raises(ScenarioError) as ei:
+            Scenario.from_dict(d)
+        assert ei.value.field == "device.service_model"
+
+    def test_from_dict_missing_nested_field_names_the_path(self):
+        d = make_scenario().to_dict()
+        del d["workload"]["arrival_rate"]
+        with pytest.raises(ScenarioError) as ei:
+            Scenario.from_dict(d)
+        assert ei.value.field == "workload.arrival_rate"
+
+    def test_crossovers_tenancy_rejects_unknown_kwargs(self):
+        with pytest.raises(TypeError):
+            crossovers(make_scenario(), "tenancy", max_tenant=64)  # typo
+
+    def test_direct_construction_with_bad_model_string(self):
+        with pytest.raises(ScenarioError) as ei:
+            make_scenario(device=Tier("d", 0.01, service_model="bogus"))
+        assert ei.value.field == "device.service_model"
+
+
+class TestAnalyticEqualsKernelLayer:
+    def test_on_device_matches_direct_call(self):
+        scn = make_scenario()
+        assert float(analytic(scn)["on_device"].total) == float(
+            on_device_latency(scn.workload, scn.device)
+        )
+
+    def test_dedicated_edge_matches_direct_call(self):
+        scn = make_scenario()
+        direct = float(
+            edge_offload_latency(scn.workload, scn.edges[0].tier, scn.network)
+        )
+        assert float(analytic(scn)["edge[0]"].total) == direct
+
+    def test_multitenant_edge_matches_direct_call(self):
+        scn = make_scenario()
+        e = scn.edges[1]
+        streams = (e.own_stream(scn.workload),) + e.background
+        direct = float(
+            multitenant_edge_latency(
+                scn.workload, e.tier, NetworkPath(e.bandwidth_Bps), streams
+            )
+        )
+        assert float(analytic(scn)["edge[1]"].total) == pytest.approx(direct, rel=1e-12)
+
+    def test_epsilon_background_is_continuous_for_exponential_edge(self):
+        # regression: the own stream's mixture variance must be the one the
+        # service model implies (s^2 for M/M/1), or an epsilon-rate background
+        # tenant discontinuously downgrades the prediction to the M/D/1 form
+        exp_edge = Tier("e", 0.02, service_model=ServiceModel.EXPONENTIAL)
+        fast_dev = Tier("d", 0.015)  # keeps the 40 rps device queue stable
+        dedicated = make_scenario(
+            workload=Workload(40.0, 25_000, 2_000),
+            device=fast_dev,
+            edges=(EdgeSpec(exp_edge),),
+        )
+        eps = make_scenario(
+            workload=Workload(40.0, 25_000, 2_000),
+            device=fast_dev,
+            edges=(EdgeSpec(exp_edge, background=(TenantStream(1e-6, 0.02, 0.02**2),)),),
+        )
+        t_ded = float(analytic(dedicated)["edge[0]"].total)
+        t_eps = float(analytic(eps)["edge[0]"].total)
+        assert t_eps == pytest.approx(t_ded, rel=1e-3)
+
+    def test_best_strategy_is_argmin(self):
+        pred = analytic(make_scenario())
+        totals = pred.totals()
+        assert totals[pred.best_strategy] == min(totals.values())
+
+    def test_return_results_flag_propagates(self):
+        with_ret = analytic(make_scenario())
+        without = analytic(make_scenario(return_results=False))
+        assert float(without["edge[0]"].total) < float(with_ret["edge[0]"].total)
+
+
+class TestSimulateAgreesWithAnalytic:
+    # tolerances mirror tests/test_simulation_validation.py
+    def test_offload_pipeline_mape(self):
+        scn = make_scenario()
+        pred = float(analytic(scn)["edge[0]"].total)
+        sim = simulate(scn, "edge[0]", n=120_000, seed=5)
+        assert abs(pred - sim.mean) / sim.mean * 100 < 3.0
+
+    def test_on_device_mape(self):
+        scn = make_scenario()
+        pred = float(analytic(scn)["on_device"].total)
+        sim = simulate(scn, "on_device", n=120_000, seed=1)
+        assert abs(pred - sim.mean) / sim.mean * 100 < 2.5
+
+    def test_multitenant_mape(self):
+        scn = make_scenario()
+        pred = float(analytic(scn)["edge[1]"].total)
+        sim = simulate(scn, "edge[1]", n=180_000, seed=6)
+        assert abs(pred - sim.stream_mean(0)) / sim.stream_mean(0) * 100 < 8.0
+
+    def test_multitenant_mape_heterogeneous_rates(self):
+        # regression: a fast background stream (30 rps vs own 8) must span the
+        # same horizon as the own stream, or the own tail sees a drained edge
+        scn = Scenario(
+            workload=Workload(8.0, 50_000, 2_000),
+            device=Tier("d", 0.05),
+            network=NetworkPath(20e6 / 8),
+            edges=(EdgeSpec(Tier("e", 0.02),
+                            background=(TenantStream(30.0, 0.02),)),),
+        )
+        pred = float(analytic(scn)["edge[0]"].total)
+        sim = simulate(scn, "edge[0]", n=200_000, seed=7)
+        assert abs(pred - sim.stream_mean(0)) / sim.stream_mean(0) * 100 < 8.0
+
+    def test_default_strategy_is_first_edge(self):
+        scn = make_scenario()
+        a = simulate(scn, n=4_000, seed=3)
+        b = simulate(scn, "edge[0]", n=4_000, seed=3)
+        np.testing.assert_array_equal(a.latencies, b.latencies)
+
+    def test_unknown_strategy_raises(self):
+        with pytest.raises(ScenarioError) as ei:
+            simulate(make_scenario(), "edge[9]", n=1000)
+        assert ei.value.field == "strategy"
+
+    def test_fractional_parallelism_refused_not_rounded(self):
+        # analytic() folds k=2.5 into k*mu; simulating 2 servers would be a
+        # structurally different system, so simulate() must refuse
+        scn = make_scenario(edges=(EdgeSpec(Tier("e", 0.005, parallelism_k=2.5)),))
+        with pytest.raises(ScenarioError) as ei:
+            simulate(scn, "edge[0]", n=1000)
+        assert ei.value.field == "edges[0].tier.parallelism_k"
+        assert np.isfinite(float(analytic(scn)["edge[0]"].total))  # analytic fine
+
+
+class TestSweepAndCrossovers:
+    def test_sweep_sets_field_and_allows_instability(self):
+        scn = make_scenario()
+        lams = [1.0, 10.0, 1000.0]  # 1000 rps saturates everything
+        fam = scn.sweep("workload.arrival_rate", lams)
+        assert [s.workload.arrival_rate for s in fam] == lams
+        assert all(s.allow_unstable for s in fam)
+        assert float(analytic(fam[-1])["on_device"].total) == np.inf
+
+    def test_sweep_nested_edge_field(self):
+        scn = make_scenario()
+        fam = scn.sweep("edges[0].tier.service_time_s", [0.001, 0.002])
+        assert [s.edges[0].tier.service_time_s for s in fam] == [0.001, 0.002]
+        # untouched fields intact
+        assert fam[0].edges[1] == scn.edges[1]
+
+    def test_replaced_unknown_field_raises(self):
+        with pytest.raises(ScenarioError):
+            make_scenario().replaced("edges[0].tier.nonsense", 1.0)
+
+    def test_bandwidth_crossover_matches_kernel_solver(self):
+        scn = make_scenario(edges=(EdgeSpec(Tier("e", 0.005, parallelism_k=2)),))
+        c = crossovers(scn, "bandwidth")
+        direct = bandwidth_crossover(scn.workload, scn.device, scn.edges[0].tier)
+        assert c.value == direct.value
+        assert c.offload_wins_above is True
+
+    def test_bandwidth_crossover_respects_background_tenants(self):
+        # the crossover must agree with analytic() on the SAME spec: a loaded
+        # edge needs more bandwidth before offloading pays than a dedicated one
+        dedicated = make_scenario(edges=(EdgeSpec(Tier("e", 0.018)),))
+        loaded = make_scenario(
+            edges=(EdgeSpec(Tier("e", 0.018),
+                            background=(TenantStream(40.0, 0.018),)),),
+            allow_unstable=True,
+        )
+        c_ded = crossovers(dedicated, "bandwidth")
+        c_load = crossovers(loaded, "bandwidth")
+        if c_load.value is not None:
+            assert c_load.value > c_ded.value
+            # and on either side of ITS crossover, analytic agrees
+            hi = loaded.replaced("network.bandwidth_Bps", c_load.value * 2)
+            assert analytic(hi).best_strategy == "edge[0]"
+        lo = loaded.replaced("network.bandwidth_Bps",
+                             (c_load.value or c_ded.value) * 0.5)
+        assert analytic(lo).best_strategy == "on_device"
+
+    def test_tenancy_crossover_returns_tenant_count(self):
+        scn = Scenario(
+            workload=Workload(2.0, 40_000, 4_000),
+            device=Tier("d", 0.060),
+            network=NetworkPath(1.25e6),
+            edges=(EdgeSpec(Tier("e", 0.012)),),
+        )
+        c = crossovers(scn, "tenancy")
+        assert c.value is not None and c.value > 1
+        # homogeneous case matches the kernel solver's [template]*m exactly
+        from repro.core.crossover import tenancy_crossover
+
+        m_kernel = tenancy_crossover(
+            scn.workload, scn.device, scn.edges[0].tier, scn.network,
+            scn.edges[0].own_stream(scn.workload),
+        )
+        assert c.value == float(m_kernel)
+
+    def test_tenancy_crossover_keeps_own_stream_with_background(self):
+        # regression: with a light background template, the own 10 rps stream
+        # must stay in the mixture — m* is far smaller than template-only math
+        own_only = Scenario(
+            workload=Workload(10.0, 40_000, 4_000),
+            device=Tier("d", 0.060),
+            network=NetworkPath(2.5e6),
+            edges=(EdgeSpec(Tier("e", 0.012)),),
+        )
+        light_bg = own_only.replaced(
+            "edges[0].background", (TenantStream(0.5, 0.012),)
+        )
+        m_own = crossovers(own_only, "tenancy").value
+        m_bg = crossovers(light_bg, "tenancy").value
+        assert m_bg is not None
+        # a 0.5 rps template on top of the own 10 rps stream means MORE
+        # copies fit than 10 rps copies, but nowhere near template-only math
+        assert m_own < m_bg < 40 * m_own
+
+    def test_unknown_axis_raises(self):
+        with pytest.raises(ScenarioError):
+            crossovers(make_scenario(), "altitude")
+
+
+class TestManagerAndGatewayFromSpec:
+    def test_manager_decides_from_spec_derived_inputs(self):
+        scn = make_scenario()
+        mgr = scn.manager()
+        d = mgr.decide(scn.workload, scn.snapshot(), scn.edge_states())
+        # offloading clearly wins at 20 Mbps; edge[1] has the faster override
+        assert d.strategy == "offload" and d.edge_index == 1
+        # the manager's dedicated-edge prediction agrees with analytic() exactly
+        assert d.t_edges[0] == float(analytic(scn)["edge[0]"].total)
+
+    def test_edge_states_aggregate_background(self):
+        scn = make_scenario()
+        st = scn.edge_states()[1]
+        # aggregate = own 10 rps + background 3 rps
+        assert st.arrival_rate == pytest.approx(13.0)
+        assert st.service_var > 0  # mixture variance, not own variance
+        assert st.bandwidth_Bps == 5e6
+
+    def test_manager_falls_back_to_device_when_saturated(self):
+        scn = make_scenario(
+            edges=(EdgeSpec(Tier("e", 0.005),
+                            background=(TenantStream(500.0, 0.005),)),),
+            allow_unstable=True,
+        )
+        d = scn.manager().decide(scn.workload, scn.snapshot(), scn.edge_states())
+        assert d.edge_index == ON_DEVICE
+
+    def test_manager_general_device_uses_variance(self):
+        # regression: GENERAL device tiers must use the M/G/1 form (variance
+        # raises the wait above the M/D/1 prediction)
+        lam = 10.0
+        base = Tier("d", 0.035, service_model=ServiceModel.DETERMINISTIC)
+        gen = Tier("d", 0.035, service_model=ServiceModel.GENERAL, service_var=0.002)
+        t_det = AdaptiveOffloadManager(base)._predict_device(lam)
+        t_gen = AdaptiveOffloadManager(gen)._predict_device(lam)
+        assert t_gen > t_det
+
+    def test_manager_survives_link_outage_snapshot(self):
+        # a MEASURED bandwidth of 0 (outage) is not a config error: Algorithm 1
+        # must fall back to on-device, not crash the serving loop
+        from repro.core.telemetry import TelemetrySnapshot
+
+        scn = make_scenario(edges=(EdgeSpec(Tier("e", 0.005, parallelism_k=2)),))
+        dead = TelemetrySnapshot(time_s=0.0, lam_dev=10.0, bandwidth_Bps=0.0)
+        d = scn.manager().decide(scn.workload, dead, scn.edge_states())
+        assert d.edge_index == ON_DEVICE
+        assert d.t_edges == (np.inf,)
+
+    def test_manager_handles_zero_res_bytes(self):
+        # res_bytes=0 passes Scenario validation and analytic(); the manager
+        # must not ZeroDivisionError on the degenerate return leg
+        scn = make_scenario(
+            workload=Workload(10.0, 25_000, 0.0),
+            edges=(EdgeSpec(Tier("e", 0.005, parallelism_k=2)),),
+            return_results=False,
+        )
+        d = scn.manager().decide(scn.workload, scn.snapshot(), scn.edge_states())
+        assert np.isfinite(d.predicted_latency_s)
+
+    def test_manager_honours_return_results(self):
+        # regression: results-consumed-at-edge specs (big res_bytes, tiny
+        # req_bytes) must not make Algorithm 1 model the dropped return leg
+        scn = Scenario(
+            workload=Workload(10.0, 5_000, 400_000),
+            device=Tier("dev", 0.030),
+            network=NetworkPath(20e6 / 8),
+            edges=(EdgeSpec(Tier("edge", 0.004, parallelism_k=2)),),
+            return_results=False,
+        )
+        d = scn.manager().decide(scn.workload, scn.snapshot(), scn.edge_states())
+        assert d.edge_index == 0  # agrees with analytic()
+        assert analytic(scn).best_strategy == "edge[0]"
+        gw = OffloadGateway.from_scenario(scn)
+        assert gw.manager.return_results is False
+
+    def test_manager_zero_bandwidth_override_rejected(self):
+        # regression: a 0.0 per-edge bandwidth must error, not silently fall
+        # back to the device-level estimate (the old `or` treated 0 as unset)
+        from repro.core.manager import EdgeServerState
+
+        mgr = AdaptiveOffloadManager(Tier("d", 0.035))
+        bad = EdgeServerState("e", 200.0, 10.0, 0.005, bandwidth_Bps=0.0)
+        with pytest.raises(ValueError):
+            mgr._predict_edge(bad, Workload(10.0, 1e4, 1e3), 10.0, 2.5e6)
+
+    def test_gateway_carries_implied_service_variance(self):
+        # regression: an EXPONENTIAL edge tier must reach the gateway's M/G/1
+        # inputs as var=s^2, not 0 — otherwise the gateway halves the edge
+        # wait near saturation relative to analytic() on the same spec
+        scn = make_scenario(
+            edges=(EdgeSpec(Tier("e", 0.02, service_model=ServiceModel.EXPONENTIAL)),),
+        )
+        gw = OffloadGateway.from_scenario(scn)
+        assert gw.edges[0].service_var_s == pytest.approx(0.02**2)
+        assert gw.edges[0].state().service_var == pytest.approx(0.02**2)
+
+    def test_gateway_from_scenario(self):
+        scn = make_scenario()
+        gw = OffloadGateway.from_scenario(scn, epoch_s=1.0)
+        assert [h.name for h in gw.edges] == ["edge-gpu", "edge-llm"]
+        assert gw.edges[1].background_rate == pytest.approx(3.0)
+        assert gw.edges[1].bandwidth_Bps == 5e6
+        for _ in range(3):
+            gw.observe_bandwidth(20e6 / 8)
+        for t in np.arange(0.0, 1.0, 0.1):
+            gw.observe_arrival(float(t))
+        d = gw.decide(now=1.0)
+        assert d.strategy in ("offload", "on_device")
