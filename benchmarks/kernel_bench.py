@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.lindley_scan.ops import lindley_scan
 from repro.kernels.rmsnorm.ops import rmsnorm
 from repro.kernels.rmsnorm.ref import rmsnorm_reference
 from repro.kernels.ssm_scan.ops import ssm_scan
@@ -56,3 +57,11 @@ def kernel_rows() -> None:
     ref, us = timed(lambda: jax.block_until_ready(rmsnorm_reference(x, sc)))
     out = rmsnorm(x, sc, impl="interpret")
     emit("kernel_rmsnorm", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")
+
+    # lindley scan (the fleet simulator's per-station recurrence)
+    rng = np.random.default_rng(0)
+    arr = jnp.asarray(np.cumsum(rng.exponential(0.1, (16, 1024)), axis=1), jnp.float32)
+    svc = jnp.asarray(rng.exponential(0.05, (16, 1024)), jnp.float32)
+    ref, us = timed(lambda: jax.block_until_ready(lindley_scan(arr, svc, impl="xla")))
+    out = lindley_scan(arr, svc, impl="interpret", blk_b=8, blk_t=256)
+    emit("kernel_lindley_scan", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")

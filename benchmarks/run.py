@@ -1,43 +1,92 @@
-"""Benchmark harness: one function per paper table/figure.
+"""Benchmark harness: one registered runner per bench family.
 
-Prints ``name,us_per_call,derived`` CSV. The roofline report (our §Roofline
-deliverable) is appended when dry-run artifacts exist under
-experiments/dryrun (see repro.launch.dryrun / repro.launch.roofline_run).
+One entrypoint executes every bench (or a ``--only`` subset), prints the
+``name,us_per_call,derived`` CSV contract to stdout, and writes each family's
+JSON artifact under ``--out``:
+
+  * ``paper_figures`` -> BENCH_paper_figures.json (per-figure headline numbers)
+  * ``fleet``         -> BENCH_fleet.json (scalar-vs-vectorized throughput)
+  * ``kernels``       -> CSV rows only (interpret-mode correctness latency)
+  * ``roofline``      -> CSV rows from dry-run artifacts, when present
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run --out experiments/bench
+  PYTHONPATH=src python -m benchmarks.run --only fleet --only kernels
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 from pathlib import Path
 
 
-def main() -> None:
+def run_paper_figures(out_dir: Path) -> dict:
     from . import paper_figures as F
 
-    print("name,us_per_call,derived")
-    F.fig2_workload_characteristics()
-    F.fig3_complex_models()
-    F.fig4_bandwidth_crossovers()
-    F.fig5a_split_processing()
-    F.fig5b_request_rate()
-    F.fig5c_multitenancy()
-    F.fig6_network_adaptation()
-    F.fig7_multitenant_adaptation()
-    F.model_accuracy_suite()
+    report = {
+        "fig2_mape_pct": F.fig2_workload_characteristics(),
+        "fig3_mape_pct": F.fig3_complex_models(),
+        "fig4_crossovers_mbps": F.fig4_bandwidth_crossovers(),
+        "fig5a_split_mape_pct": F.fig5a_split_processing(),
+        "fig5b_offload_wins": F.fig5b_request_rate(),
+        "fig5c_crossover_m": F.fig5c_multitenancy(),
+        "fig6_strategies": F.fig6_network_adaptation(),
+        "fig7_targets": F.fig7_multitenant_adaptation(),
+        "model_accuracy": F.model_accuracy_suite(),
+    }
+    (out_dir / "BENCH_paper_figures.json").write_text(json.dumps(report, indent=2))
+    return report
 
+
+def run_kernels(out_dir: Path) -> dict:
     # kernel micro-benchmarks (interpret-mode correctness latency on CPU is
     # not a perf claim; rows document call overhead + validated tolerance)
     from .kernel_bench import kernel_rows
 
     kernel_rows()
+    return {}
 
+
+def run_fleet(out_dir: Path) -> dict:
+    from .fleet_bench import fleet_rows
+
+    return fleet_rows(out_dir)
+
+
+def run_roofline(out_dir: Path) -> dict:
     # roofline table from dry-run artifacts, if present
     roof = Path("experiments/roofline")
     if roof.is_dir() and any(roof.glob("*.json")):
         from .roofline_report import print_roofline_rows
 
         print_roofline_rows(roof)
+    return {}
+
+
+BENCHES = {
+    "paper_figures": run_paper_figures,
+    "kernels": run_kernels,
+    "fleet": run_fleet,
+    "roofline": run_roofline,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", action="append", choices=sorted(BENCHES),
+                    help="run only these bench families (repeatable; default all)")
+    ap.add_argument("--out", type=Path, default=Path("experiments/bench"),
+                    help="directory for JSON artifacts")
+    args = ap.parse_args(argv)
+
+    names = args.only or list(BENCHES)
+    args.out.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name in names:
+        BENCHES[name](args.out)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -16,7 +16,7 @@ Beyond-paper (flag-gated, default off, recorded in EXPERIMENTS.md):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 
@@ -186,6 +186,28 @@ class AdaptiveOffloadManager:
         self._last = decision
         self.history.append(decision)
         return decision
+
+    # -- shared epoch entry point ----------------------------------------------
+    def step(self, t: float, metrics: Mapping) -> Decision:
+        """One epoch from measured metrics — the single decision path shared
+        by the serving gateway and the fleet trace replay.
+
+        ``metrics`` keys: ``workload`` (:class:`Workload`), ``lam_dev`` and
+        ``bandwidth_Bps`` (estimator outputs, *not* raw instantaneous values),
+        and optionally ``edges`` (a sequence of :class:`EdgeServerState`).
+        Builds the :class:`TelemetrySnapshot` and runs Algorithm 1 lines 1-11;
+        keeping snapshot assembly here means no consumer re-implements the
+        dispatch and the two paths can never disagree on the same metrics.
+        """
+        for key in ("workload", "lam_dev", "bandwidth_Bps"):
+            if key not in metrics:
+                raise KeyError(f"metrics missing required key {key!r}")
+        snap = TelemetrySnapshot(
+            time_s=t,
+            lam_dev=float(metrics["lam_dev"]),
+            bandwidth_Bps=float(metrics["bandwidth_Bps"]),
+        )
+        return self.decide(metrics["workload"], snap, tuple(metrics.get("edges", ())))
 
     @property
     def switches(self) -> int:

@@ -391,11 +391,35 @@ class Scenario:
 
     def sweep(self, field_path: str, values: Iterable) -> list["Scenario"]:
         """A family of scenarios varying one field — the vectorised form every
-        figure-style experiment uses. Sweeps routinely cross stability
-        boundaries on purpose, so swept copies carry ``allow_unstable=True``
-        and the closed forms report ``inf`` past saturation."""
+        figure-style experiment uses. ``values`` may be any iterable, including
+        numpy arrays (elements are coerced to plain Python numbers so swept
+        specs stay exactly JSON-round-trippable). Sweeps routinely cross
+        stability boundaries on purpose, so swept copies carry
+        ``allow_unstable=True`` and the closed forms report ``inf`` past
+        saturation."""
         base = self if self.allow_unstable else replace(self, allow_unstable=True)
-        return [base.replaced(field_path, v) for v in values]
+        return [base.replaced(field_path, _coerce_value(v)) for v in values]
+
+    def grid(self, axes: Mapping[str, Iterable]) -> list["Scenario"]:
+        """Cartesian multi-axis sweep: one scenario per combination of axis
+        values, in C order (last axis fastest — matching
+        ``np.meshgrid(..., indexing="ij")`` raveled, and therefore row ``i`` of
+        ``repro.fleet.ScenarioBatch.from_sweep(scn, axes)``). Like
+        :meth:`sweep`, grid points carry ``allow_unstable=True``."""
+        import itertools
+
+        base = self if self.allow_unstable else replace(self, allow_unstable=True)
+        paths = list(axes)
+        value_lists = [[_coerce_value(v) for v in axes[p]] for p in paths]
+        for p, vals in zip(paths, value_lists):
+            _require(len(vals) > 0, p, "grid axis must have at least one value")
+        out = []
+        for combo in itertools.product(*value_lists):
+            scn = base
+            for p, v in zip(paths, combo):
+                scn = scn.replaced(p, v)
+            out.append(scn)
+        return out
 
     # -- consumer constructors -------------------------------------------------
     def network_for(self, edge: EdgeSpec) -> NetworkPath:
@@ -450,6 +474,11 @@ class Scenario:
 # ---------------------------------------------------------------------------
 
 _PATH_TOKEN = re.compile(r"([A-Za-z_][A-Za-z_0-9]*)((?:\[\d+\])*)$")
+
+
+def _coerce_value(v: Any) -> Any:
+    """numpy scalars -> plain Python numbers (keeps to_dict JSON-clean)."""
+    return v.item() if isinstance(v, np.generic) else v
 
 
 def _parse_path(field_path: str) -> list:

@@ -1,0 +1,32 @@
+"""Fleet-scale scenario evaluation: vectorized sweeps + trace-driven replay.
+
+The scalar layer (`repro.core`) answers "what happens at THIS operating
+point"; this package answers it for millions of operating points per second
+and for operating points that *move*:
+
+  * :class:`ScenarioBatch` — struct-of-arrays packing of Scenario specs;
+  * :func:`fleet_analytic` / :func:`fleet_crossover` — jitted closed forms
+    and batched-bisection crossover solving over a whole batch;
+  * :func:`simulate_fleet` / :func:`lindley_station` — batched
+    Lindley-recursion tandem-queue simulation as one `lax.scan` launch;
+  * :mod:`traces` + :func:`replay` — §5-style dynamic conditions scored
+    against adaptive vs static offloading policies via the same
+    ``AdaptiveOffloadManager.step()`` hook the serving gateway uses.
+"""
+
+from .analytic_vec import (
+    FleetCrossover,
+    FleetPrediction,
+    fleet_analytic,
+    fleet_crossover,
+    md1_wait_vec,
+    mg1_wait_vec,
+    mm1_wait_vec,
+    mmk_wait_erlang_vec,
+)
+from .batch import MODEL_CODES, SWEEPABLE_PATHS, ScenarioBatch
+from .replay import PolicyResult, ReplayResult, replay
+from .sim_vec import FleetSimResult, lindley_station, simulate_fleet
+from .traces import Trace, drift_signal, epoch_times, make_trace, mmpp_signal, step_signal
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: the k=1 Lindley recursion as a lax.scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lindley_scan_reference"]
+
+
+def lindley_scan_reference(arrivals: jax.Array, services: jax.Array) -> jax.Array:
+    """dep_i = max(arr_i, dep_{i-1}) + svc_i, batched over rows."""
+
+    def step(clk, cols):
+        a, s = cols
+        dep = jnp.maximum(a, clk) + s
+        return dep, dep
+
+    init = jnp.full(arrivals.shape[:1], -jnp.inf, dtype=arrivals.dtype)
+    _, deps = jax.lax.scan(step, init, (arrivals.T, services.T))
+    return deps.T

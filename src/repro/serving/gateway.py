@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.core.latency import NetworkPath, ServiceModel, Tier, Workload
 from repro.core.manager import ON_DEVICE, AdaptiveOffloadManager, Decision, EdgeServerState
-from repro.core.telemetry import EwmaEstimator, SlidingRateEstimator, TelemetrySnapshot, WindowedMoments
+from repro.core.telemetry import EwmaEstimator, SlidingRateEstimator, WindowedMoments
 
 __all__ = ["EdgeHandle", "OffloadGateway"]
 
@@ -151,17 +151,19 @@ class OffloadGateway:
 
     # -- epoch decision (Algorithm 1) ----------------------------------------
     def decide(self, now: float) -> Decision:
-        snap = TelemetrySnapshot(
-            time_s=now,
-            lam_dev=max(self.arrivals.rate(now), self.wl.arrival_rate * 0.0),
-            bandwidth_Bps=self.bandwidth.value,
+        measured = self.arrivals.rate(now)
+        lam = measured if measured > 0 else self.wl.arrival_rate
+        # one decision path: the manager's step() hook builds the snapshot and
+        # runs Algorithm 1 for both this gateway and repro.fleet.replay
+        d = self.manager.step(
+            now,
+            {
+                "workload": self.wl,
+                "lam_dev": lam,
+                "bandwidth_Bps": self.bandwidth.value,
+                "edges": [e.state() for e in self.edges],
+            },
         )
-        lam = snap.lam_dev if snap.lam_dev > 0 else self.wl.arrival_rate
-        snap = TelemetrySnapshot(
-            time_s=now, lam_dev=lam, bandwidth_Bps=self.bandwidth.value
-        )
-        states = [e.state() for e in self.edges]
-        d = self.manager.decide(self.wl, snap, states)
         self.decisions.append(d)
         return d
 
