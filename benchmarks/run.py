@@ -6,6 +6,7 @@ JSON artifact under ``--out``:
 
   * ``paper_figures`` -> BENCH_paper_figures.json (per-figure headline numbers)
   * ``fleet``         -> BENCH_fleet.json (scalar-vs-vectorized throughput)
+  * ``validate``      -> BENCH_validate.json (fidelity-gate cost + headline MAPE)
   * ``kernels``       -> CSV rows only (interpret-mode correctness latency)
   * ``roofline``      -> CSV rows from dry-run artifacts, when present
 
@@ -54,6 +55,12 @@ def run_fleet(out_dir: Path) -> dict:
     return fleet_rows(out_dir)
 
 
+def run_validate(out_dir: Path) -> dict:
+    from .validate_bench import validate_rows
+
+    return validate_rows(out_dir)
+
+
 def run_roofline(out_dir: Path) -> dict:
     # roofline table from dry-run artifacts, if present
     roof = Path("experiments/roofline")
@@ -68,6 +75,7 @@ BENCHES = {
     "paper_figures": run_paper_figures,
     "kernels": run_kernels,
     "fleet": run_fleet,
+    "validate": run_validate,
     "roofline": run_roofline,
 }
 

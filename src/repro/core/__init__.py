@@ -39,6 +39,7 @@ from .scenario import (
     ScenarioPrediction,
     analytic,
     crossovers,
+    parse_strategy,
     simulate,
 )
 from .queueing import (

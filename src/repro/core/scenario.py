@@ -58,6 +58,7 @@ __all__ = [
     "simulate",
     "crossovers",
     "implied_service_var",
+    "parse_strategy",
 ]
 
 
@@ -593,16 +594,29 @@ def _tenant_dist(t: TenantStream) -> S.ServiceDist:
     )
 
 
+def parse_strategy(strategy: str, n_edges: int | None = None) -> int:
+    """THE parser for strategy labels: -1 for ``"on_device"``, j for
+    ``"edge[j]"`` (range-checked when ``n_edges`` is given). Every consumer
+    of ``Decision.target_name``-style labels — the scalar simulator, the
+    validation corpus/differential harness — goes through here, so a
+    malformed label always fails the same way: a ScenarioError naming the
+    ``strategy`` field."""
+    if strategy == "on_device":
+        return -1
+    m = re.fullmatch(r"edge\[(\d+)\]", strategy) if isinstance(strategy, str) else None
+    if m is not None:
+        j = int(m.group(1))
+        if n_edges is None or j < n_edges:
+            return j
+    known = ["on_device"] + (
+        ["edge[j]"] if n_edges is None else [f"edge[{i}]" for i in range(n_edges)])
+    raise ScenarioError("strategy", f"unknown strategy {strategy!r} (known: {known})")
+
+
 def _resolve_strategy(scn: Scenario, strategy: str | None) -> tuple[str, int]:
     if strategy is None:
         strategy = "edge[0]" if scn.edges else "on_device"
-    if strategy == "on_device":
-        return strategy, -1
-    m = re.fullmatch(r"edge\[(\d+)\]", strategy)
-    if not m or int(m.group(1)) >= len(scn.edges):
-        known = ["on_device"] + [f"edge[{i}]" for i in range(len(scn.edges))]
-        raise ScenarioError("strategy", f"unknown strategy {strategy!r} (known: {known})")
-    return strategy, int(m.group(1))
+    return strategy, parse_strategy(strategy, len(scn.edges))
 
 
 def _integer_k(tier: Tier, field_path: str) -> int:

@@ -30,6 +30,7 @@ __all__ = [
     "Mixture",
     "poisson_arrivals",
     "station_pass",
+    "steady_slice",
     "SimResult",
     "simulate_tandem",
     "simulate_on_device",
@@ -184,6 +185,16 @@ def station_pass(arrivals: np.ndarray, services: np.ndarray, k: int = 1) -> np.n
     return dep
 
 
+def steady_slice(n: int, warmup_frac: float = 0.1) -> slice:
+    """The steady-state window of an n-job run: drop the warmup prefix AND a
+    small cooldown tail (boundary effects). THE single definition of the trim
+    — SimResult, FleetSimResult, and the validation harness all use it, so
+    predicted-vs-observed comparisons can never drift on windowing."""
+    n0 = int(n * warmup_frac)
+    n1 = n - max(1, int(n * 0.02))
+    return slice(n0, n1)
+
+
 @dataclass
 class SimResult:
     """Observed end-to-end latencies of one simulated scenario."""
@@ -195,10 +206,7 @@ class SimResult:
     extras: dict = field(default_factory=dict)
 
     def _steady(self) -> np.ndarray:
-        n0 = int(len(self.latencies) * self.warmup_frac)
-        # drop warmup AND cooldown tails (boundary effects)
-        n1 = len(self.latencies) - max(1, int(len(self.latencies) * 0.02))
-        return self.latencies[n0:n1]
+        return self.latencies[steady_slice(len(self.latencies), self.warmup_frac)]
 
     @property
     def mean(self) -> float:
@@ -209,10 +217,9 @@ class SimResult:
 
     def stream_mean(self, sid: int) -> float:
         assert self.stream_ids is not None
-        n0 = int(len(self.latencies) * self.warmup_frac)
-        n1 = len(self.latencies) - max(1, int(len(self.latencies) * 0.02))
-        mask = self.stream_ids[n0:n1] == sid
-        return float(np.mean(self.latencies[n0:n1][mask]))
+        sl = steady_slice(len(self.latencies), self.warmup_frac)
+        mask = self.stream_ids[sl] == sid
+        return float(np.mean(self.latencies[sl][mask]))
 
 
 def simulate_tandem(

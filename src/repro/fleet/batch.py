@@ -66,6 +66,27 @@ _EDGE_LEAVES = {
     "bandwidth_Bps": "edge_bw",
 }
 
+# domain of each sweepable column, mirroring Scenario's eager validation:
+# positivity is NOT a stability concern, so even allow_unstable sweeps must
+# fail fast on these (exactly like base.grid(axes) would, row for row)
+_POSITIVE_ATTRS = frozenset(
+    {"lam", "req_bytes", "bandwidth_Bps", "dev_s", "dev_k",
+     "edge_s", "edge_k", "edge_bw"})
+_NONNEGATIVE_ATTRS = frozenset({"res_bytes", "dev_var", "edge_var"})
+
+
+def _validate_axis_domain(path: str, attr: str, values: np.ndarray) -> None:
+    """Reject axis values grid() would reject, without building Scenarios."""
+    if not np.all(np.isfinite(values)):
+        bad = values[~np.isfinite(values)][0]
+        raise ScenarioError(path, f"axis values must be finite, got {bad!r}")
+    if attr in _POSITIVE_ATTRS and np.any(values <= 0):
+        bad = values[values <= 0][0]
+        raise ScenarioError(path, f"must be positive, got {bad!r}")
+    if attr in _NONNEGATIVE_ATTRS and np.any(values < 0):
+        bad = values[values < 0][0]
+        raise ScenarioError(path, f"must be non-negative, got {bad!r}")
+
 
 def _sweep_slot(path: str, n_edges: int) -> tuple[str, int | None]:
     """(attribute, edge column) for a sweepable field path."""
@@ -216,6 +237,9 @@ class ScenarioBatch:
             # fail fast on bad paths/values exactly like the object API would
             probe.replaced(p, float(v[0]))
         slots = [_sweep_slot(p, len(base.edges)) for p in paths]
+        for p, v, (attr, _j) in zip(paths, values, slots):
+            # EVERY value, not just the probe: grid() validates each point
+            _validate_axis_domain(p, attr, v)
 
         packed = cls.from_scenarios([base])
         b = int(np.prod([v.size for v in values]))

@@ -33,6 +33,8 @@ import jax.experimental
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.simulation import steady_slice
+
 from .batch import ScenarioBatch
 
 __all__ = ["FleetSimResult", "lindley_station", "simulate_fleet"]
@@ -118,10 +120,8 @@ class FleetSimResult:
     warmup_frac: float = 0.1
 
     def _steady(self) -> np.ndarray:
-        n = self.latencies.shape[1]
-        n0 = int(n * self.warmup_frac)
-        n1 = n - max(1, int(n * 0.02))  # drop warmup AND cooldown tails
-        return self.latencies[:, n0:n1]
+        return self.latencies[:, steady_slice(self.latencies.shape[1],
+                                              self.warmup_frac)]
 
     @property
     def mean(self) -> np.ndarray:

@@ -1,0 +1,45 @@
+"""Differential model validation: golden corpus, error metrics, MAPE gate.
+
+The standing quality ratchet for the repo's four evaluation paths (scalar
+analytic, vectorized analytic, scalar simulation, batched simulation):
+
+  * :mod:`corpus` — seeded golden scenario corpus spanning the paper's axes,
+    pinned as a JSON fixture under ``tests/golden/``;
+  * :mod:`metrics` — MAPE, per-regime error tables, block-bootstrap CIs;
+  * :mod:`differential` — the cross-path runner and fidelity report behind
+    ``python -m repro.launch.validate`` (writes ``VALIDATION.json``).
+"""
+
+from .corpus import (
+    BAND_ORDER,
+    CORPUS_VERSION,
+    DEFAULT_SEED,
+    CorpusEntry,
+    RHO_BANDS,
+    bottleneck_rho,
+    corpus_to_dict,
+    default_fixture_path,
+    generate_corpus,
+    load_corpus,
+    rho_band,
+    save_corpus,
+)
+from .differential import (
+    DEFAULT_GOLDEN_TOL,
+    DEFAULT_MAPE_BUDGET_PCT,
+    DEFAULT_VEC_TOL,
+    EntryReport,
+    ValidationReport,
+    run_differential,
+    smoke_subset,
+)
+from .metrics import (
+    BootstrapCI,
+    ErrorStats,
+    bootstrap_mean_ci,
+    error_stats,
+    error_table,
+    mape,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,425 @@
+"""Seeded golden scenario corpus spanning the paper's evaluation axes.
+
+The paper validates its closed forms over a structured sweep of operating
+points (§4.3): accelerator tiers on both sides, bandwidths from cellular to
+LAN, arrival rates from idle to near-saturation, and multi-tenant edges. This
+module generates the repo's equivalent — a deterministic, seeded corpus of
+:class:`repro.core.Scenario` specs, each tagged with
+
+  * the **strategy** whose prediction the scenario exercises
+    (``"on_device"`` or ``"edge[0]"``),
+  * a **regime** label (which queueing formulation is load-bearing:
+    ``device-md1``, ``offload-network-bound``, ``multitenant``, ...),
+  * the bottleneck **utilization** rho and its band (``low`` < 0.3 <= ``mid``
+    < 0.6 <= ``high`` < 0.8 <= ``peak`` <= 0.9 < ``stress`` <= ~0.95),
+  * whether the entry counts toward the **MAPE gate** (``sim_gate``) — the
+    aggregation-approximation regimes (k>1 folded into k*mu, paper §3.5) and
+    the stress band are reported but not gated, matching how the repo's tests
+    have always quantified those approximations separately, and
+  * whether it belongs to the fast **smoke** subset run in tier-1.
+
+The corpus is data, not a process: ``generate_corpus(seed)`` is pure, and the
+checked-in JSON fixture under ``tests/golden/`` pins both the specs and their
+golden scalar-analytic totals, so any future change to the closed forms that
+moves a prediction is caught as a diff, not a silent drift.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.latency import NetworkPath, ServiceModel, Tier, Workload
+from repro.core.multitenant import TenantStream
+from repro.core.scenario import (
+    EdgeSpec,
+    Scenario,
+    ScenarioError,
+    analytic,
+    parse_strategy,
+)
+
+__all__ = [
+    "CorpusEntry",
+    "RHO_BANDS",
+    "rho_band",
+    "bottleneck_rho",
+    "generate_corpus",
+    "corpus_to_dict",
+    "save_corpus",
+    "load_corpus",
+    "default_fixture_path",
+    "CORPUS_VERSION",
+    "DEFAULT_SEED",
+]
+
+CORPUS_VERSION = 1
+DEFAULT_SEED = 0
+
+# band name -> (lo, hi]; "low" is [0, 0.3) for readability
+RHO_BANDS: tuple[tuple[str, float, float], ...] = (
+    ("low", 0.0, 0.3),
+    ("mid", 0.3, 0.6),
+    ("high", 0.6, 0.8),
+    ("peak", 0.8, 0.9),
+    ("stress", 0.9, 1.0),
+)
+
+BAND_ORDER = tuple(name for name, _, _ in RHO_BANDS)
+
+
+def rho_band(rho: float) -> str:
+    """The utilization band a bottleneck rho falls in (upper-inclusive, so a
+    rho of exactly 0.9 is still ``peak`` and still gated)."""
+    for name, _lo, hi in RHO_BANDS:
+        if rho <= hi + 1e-12:
+            return name
+    return "stress"
+
+
+def bottleneck_rho(scn: Scenario, strategy: str) -> float:
+    """Utilization of the busiest queue on ``strategy``'s path.
+
+    on_device: the device processing queue (lam * s / k). edge[j]: max over
+    the device NIC, the edge processing queue at the aggregate load, and the
+    return NIC (when results come back) — the same queues stability
+    validation checks, so rho < 1 is guaranteed for a validated spec.
+    """
+    wl = scn.workload
+    j = parse_strategy(strategy, len(scn.edges))
+    if j < 0:
+        return wl.arrival_rate * scn.device.service_time_s / scn.device.parallelism_k
+    e = scn.edges[j]
+    b = float(np.asarray(scn.network_for(e).bandwidth_Bps))
+    agg = e.aggregate(wl)
+    rhos = [
+        wl.arrival_rate * wl.req_bytes / b,
+        agg.arrival_rate * agg.service_mean_s / e.tier.parallelism_k,
+    ]
+    if scn.return_results and wl.res_bytes > 0:
+        rhos.append(agg.arrival_rate * wl.res_bytes / b)
+    return float(max(rhos))
+
+
+@dataclass(frozen=True)
+class CorpusEntry:
+    """One golden scenario plus the metadata the differential harness needs."""
+
+    scenario: Scenario
+    strategy: str  # the evaluation path this entry exercises
+    regime: str  # which closed-form regime is load-bearing
+    rho: float  # bottleneck utilization on the strategy's path
+    sim_gate: bool  # counts toward the analytic-vs-simulated MAPE gate
+    smoke: bool  # member of the fast tier-1 subset
+
+    @property
+    def name(self) -> str:
+        return self.scenario.name
+
+    @property
+    def band(self) -> str:
+        return rho_band(self.rho)
+
+    def to_dict(self) -> dict:
+        return {
+            "scenario": self.scenario.to_dict(),
+            "strategy": self.strategy,
+            "regime": self.regime,
+            "rho": self.rho,
+            "rho_band": self.band,
+            "sim_gate": self.sim_gate,
+            "smoke": self.smoke,
+            # golden pin: scalar analytic totals at generation time
+            "expected_totals": analytic(self.scenario).totals(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "CorpusEntry":
+        return cls(
+            scenario=Scenario.from_dict(d["scenario"]),
+            strategy=d["strategy"],
+            regime=d["regime"],
+            rho=float(d["rho"]),
+            sim_gate=bool(d["sim_gate"]),
+            smoke=bool(d["smoke"]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# generation
+# ---------------------------------------------------------------------------
+
+# (name, service_time_s, ServiceModel, cv^2 for GENERAL) — paper-flavoured
+# accelerator tiers; DNNs are deterministic [27], LLM/RNN decode exponential
+# (Lemma 3.3), mixed-serving general (Lemma 3.2).
+_DEVICE_TIERS = (
+    ("tx2-dnn", 0.150, ServiceModel.DETERMINISTIC, 0.0),
+    ("orin-dnn", 0.045, ServiceModel.DETERMINISTIC, 0.0),
+    ("cpu-rnn", 0.120, ServiceModel.EXPONENTIAL, 1.0),
+    ("npu-mixed", 0.060, ServiceModel.GENERAL, 0.25),
+)
+
+_EDGE_TIERS = (
+    ("a2-dnn", 0.028, ServiceModel.DETERMINISTIC, 0.0),
+    ("a100-dnn", 0.008, ServiceModel.DETERMINISTIC, 0.0),
+    ("t4-llm", 0.020, ServiceModel.EXPONENTIAL, 1.0),
+    ("edge-mixed", 0.015, ServiceModel.GENERAL, 0.25),
+)
+
+_BANDWIDTHS_BPS = (5e6 / 8, 20e6 / 8, 100e6 / 8)  # 5 / 20 / 100 Mbit links
+
+
+def _tier(name: str, s: float, model: ServiceModel, cv2: float, k: float = 1.0) -> Tier:
+    return Tier(
+        name=name,
+        service_time_s=s,
+        parallelism_k=k,
+        service_model=model,
+        service_var=cv2 * s * s if model is ServiceModel.GENERAL else 0.0,
+    )
+
+
+def _jitter(rng: np.random.Generator, value: float, frac: float = 0.1) -> float:
+    """Seeded multiplicative jitter so corpus points aren't round numbers."""
+    return float(value * rng.uniform(1.0 - frac, 1.0 + frac))
+
+
+def _device_entry(
+    rng: np.random.Generator,
+    spec: tuple[str, float, ServiceModel, float],
+    target_rho: float,
+    *,
+    k: float = 1.0,
+    regime: str | None = None,
+    sim_gate: bool = True,
+    smoke: bool = False,
+) -> CorpusEntry:
+    name, s0, model, cv2 = spec
+    s = _jitter(rng, s0)
+    lam = target_rho * k / s
+    scn = Scenario(
+        workload=Workload(arrival_rate=lam, req_bytes=50_000, res_bytes=2_000,
+                          name="corpus"),
+        device=_tier(name, s, model, cv2, k),
+        network=NetworkPath(bandwidth_Bps=_BANDWIDTHS_BPS[-1]),
+        edges=(),
+        name=f"dev-{name}-rho{target_rho:.2f}" + (f"-k{k:g}" if k != 1.0 else ""),
+    )
+    return CorpusEntry(
+        scenario=scn,
+        strategy="on_device",
+        regime=regime or f"device-{model.value}",
+        rho=bottleneck_rho(scn, "on_device"),
+        sim_gate=sim_gate and target_rho <= 0.9,
+        smoke=smoke,
+    )
+
+
+def _offload_entry(
+    rng: np.random.Generator,
+    edge_spec: tuple[str, float, ServiceModel, float],
+    target_rho: float,
+    *,
+    bound: str,  # "compute" | "network"
+    k_edge: float = 1.0,
+    regime: str | None = None,
+    sim_gate: bool = True,
+    smoke: bool = False,
+) -> CorpusEntry:
+    name, s0, model, cv2 = edge_spec
+    s = _jitter(rng, s0)
+    req = _jitter(rng, 120_000)
+    res = _jitter(rng, 4_000)
+    if bound == "compute":
+        # edge processing is the bottleneck; NICs run at ~40% of target rho
+        lam = target_rho * k_edge / s
+        bw = lam * req / max(0.05, 0.4 * target_rho)
+    else:
+        # device NIC is the bottleneck; edge runs at ~35% of target rho
+        bw = _jitter(rng, _BANDWIDTHS_BPS[0])
+        lam = target_rho * bw / req
+        s = max(0.05, 0.35 * target_rho) * k_edge / lam
+    # device exists but is off-path: keep its own queue comfortably stable
+    dev_k = max(1.0, lam * 0.150 / 0.7)
+    scn = Scenario(
+        workload=Workload(arrival_rate=lam, req_bytes=req, res_bytes=res,
+                          name="corpus"),
+        device=Tier("tx2-dnn", 0.150, parallelism_k=dev_k),
+        network=NetworkPath(bandwidth_Bps=bw),
+        edges=(EdgeSpec(_tier(name, s, model, cv2, k_edge)),),
+        name=f"off-{bound}-{name}-rho{target_rho:.2f}"
+        + (f"-k{k_edge:g}" if k_edge != 1.0 else ""),
+    )
+    return CorpusEntry(
+        scenario=scn,
+        strategy="edge[0]",
+        regime=regime or f"offload-{bound}-{model.value}",
+        rho=bottleneck_rho(scn, "edge[0]"),
+        sim_gate=sim_gate and target_rho <= 0.9,
+        smoke=smoke,
+    )
+
+
+def _multitenant_entry(
+    rng: np.random.Generator,
+    target_rho: float,
+    n_tenants: int,
+    *,
+    hetero: bool = False,
+    smoke: bool = False,
+    sim_gate: bool = True,
+) -> CorpusEntry:
+    s_edge = _jitter(rng, 0.020)
+    lam_own = _jitter(rng, 2.0)
+    # Gated entries use near-homogeneous tenant service means (the paper's
+    # §4.8 setup: m copies of the same app). Lemma 3.2 prices every job at the
+    # MIXTURE mean, so strongly heterogeneous means are a known, quantified
+    # model approximation — generated too (``hetero``), reported, not gated.
+    if hetero:
+        means = [_jitter(rng, m, 0.2) for m in np.linspace(0.010, 0.045, n_tenants)]
+    else:
+        means = [_jitter(rng, s_edge) for _ in range(n_tenants)]
+    cv2s = [rng.choice([0.0, 0.25, 1.0]) for _ in range(n_tenants)]
+    budget = target_rho - lam_own * s_edge  # background's share of utilization
+    if budget <= 0:
+        raise ValueError("target rho too small for the own stream alone")
+    weights = rng.uniform(0.5, 1.5, size=n_tenants)
+    weights /= weights.sum()
+    tenants = tuple(
+        TenantStream(
+            arrival_rate=float(w * budget / m),
+            service_mean_s=float(m),
+            service_var=float(c * m * m),
+            name=f"tenant{i}",
+        )
+        for i, (w, m, c) in enumerate(zip(weights, means, cv2s))
+    )
+    bw = _BANDWIDTHS_BPS[2]
+    scn = Scenario(
+        workload=Workload(arrival_rate=lam_own, req_bytes=60_000, res_bytes=3_000,
+                          name="corpus"),
+        device=Tier("tx2-dnn", 0.150),
+        network=NetworkPath(bandwidth_Bps=bw),
+        edges=(EdgeSpec(
+            _tier("shared-edge", s_edge, ServiceModel.GENERAL, 0.25),
+            background=tenants,
+        ),),
+        name=f"mt-{'het-' if hetero else ''}{n_tenants}tenants-rho{target_rho:.2f}",
+    )
+    return CorpusEntry(
+        scenario=scn,
+        strategy="edge[0]",
+        regime="multitenant-hetero" if hetero else "multitenant",
+        rho=bottleneck_rho(scn, "edge[0]"),
+        sim_gate=sim_gate and not hetero and target_rho <= 0.9,
+        smoke=smoke,
+    )
+
+
+def generate_corpus(seed: int = DEFAULT_SEED) -> tuple[CorpusEntry, ...]:
+    """The golden corpus: deterministic in ``seed``, spanning tiers x
+    bandwidth x arrival rate x tenancy x service-model mix x utilization
+    bands up to rho ~ 0.95."""
+    rng = np.random.default_rng(seed)
+    entries: list[CorpusEntry] = []
+
+    # -- on-device: every tier x a rho ladder into the stress band ----------
+    for spec in _DEVICE_TIERS:
+        for rho in (0.2, 0.5, 0.75, 0.9):
+            entries.append(_device_entry(
+                rng, spec, rho,
+                smoke=(rho == 0.5 and spec[0] in ("tx2-dnn", "cpu-rnn", "npu-mixed")),
+            ))
+    # stress band: reported, never gated (sim means are noise-dominated there)
+    entries.append(_device_entry(rng, _DEVICE_TIERS[0], 0.95))
+    entries.append(_device_entry(rng, _DEVICE_TIERS[2], 0.95))
+    # k>1 aggregation approximation (paper §3.5): quantified, not gated
+    for rho in (0.5, 0.8):
+        entries.append(_device_entry(
+            rng, _DEVICE_TIERS[0], rho, k=4.0, regime="device-aggregated-k",
+            sim_gate=False,
+        ))
+
+    # -- dedicated-edge offload: compute-bound and network-bound -------------
+    for spec in _EDGE_TIERS:
+        for rho in (0.25, 0.55, 0.8):
+            entries.append(_offload_entry(
+                rng, spec, rho, bound="compute",
+                smoke=(rho == 0.55 and spec[0] in ("a2-dnn", "t4-llm")),
+            ))
+    entries.append(_offload_entry(rng, _EDGE_TIERS[0], 0.9, bound="compute"))
+    entries.append(_offload_entry(rng, _EDGE_TIERS[0], 0.93, bound="compute"))
+    for rho, smoke in ((0.45, True), (0.75, False), (0.88, False)):
+        entries.append(_offload_entry(rng, _EDGE_TIERS[1], rho, bound="network",
+                                      smoke=smoke))
+    # k>1 edge: aggregation regime again, not gated
+    entries.append(_offload_entry(
+        rng, _EDGE_TIERS[0], 0.7, bound="compute", k_edge=2.0,
+        regime="offload-aggregated-k", sim_gate=False,
+    ))
+
+    # -- multi-tenant edges (§3.4): tenancy x utilization --------------------
+    entries.append(_multitenant_entry(rng, 0.40, 2, smoke=True))
+    entries.append(_multitenant_entry(rng, 0.65, 3))
+    entries.append(_multitenant_entry(rng, 0.80, 4))
+    entries.append(_multitenant_entry(rng, 0.92, 3, sim_gate=False))
+    # heterogeneous mixtures: the Lemma-3.2 mixture-mean approximation,
+    # quantified but never gated
+    entries.append(_multitenant_entry(rng, 0.45, 2, hetero=True))
+    entries.append(_multitenant_entry(rng, 0.75, 3, hetero=True))
+
+    names = [e.name for e in entries]
+    assert len(names) == len(set(names)), "corpus entry names must be unique"
+    return tuple(entries)
+
+
+# ---------------------------------------------------------------------------
+# fixture IO
+# ---------------------------------------------------------------------------
+
+
+def default_fixture_path() -> Path:
+    """tests/golden/corpus_v1.json at the repo root (source checkouts)."""
+    return Path(__file__).resolve().parents[3] / "tests" / "golden" / "corpus_v1.json"
+
+
+def corpus_to_dict(entries: Iterable[CorpusEntry], *, seed: int) -> dict:
+    return {
+        "version": CORPUS_VERSION,
+        "seed": seed,
+        "generator": "repro.validate.corpus:generate_corpus",
+        "entries": [e.to_dict() for e in entries],
+    }
+
+
+def save_corpus(entries: Sequence[CorpusEntry], path: Path, *, seed: int) -> None:
+    """Write the fixture JSON (stable key order, full float precision, so
+    regeneration with the same seed is byte-identical)."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(corpus_to_dict(entries, seed=seed), indent=2,
+                               sort_keys=True) + "\n")
+
+
+def load_corpus(path: Path | None = None) -> tuple[tuple[CorpusEntry, ...], dict]:
+    """Load (entries, metadata) from a fixture; falls back to regenerating
+    from the default seed when no fixture exists (installed-package use)."""
+    path = default_fixture_path() if path is None else Path(path)
+    if not path.exists():
+        entries = generate_corpus(DEFAULT_SEED)
+        return entries, {"version": CORPUS_VERSION, "seed": DEFAULT_SEED,
+                         "path": None}
+    d = json.loads(path.read_text())
+    if d.get("version") != CORPUS_VERSION:
+        raise ScenarioError("corpus.version",
+                            f"fixture {path} has version {d.get('version')!r}, "
+                            f"expected {CORPUS_VERSION}")
+    entries = tuple(CorpusEntry.from_dict(ed) for ed in d["entries"])
+    meta = {"version": d["version"], "seed": d["seed"], "path": str(path),
+            "expected_totals": {ed["scenario"]["name"]: ed["expected_totals"]
+                                for ed in d["entries"]}}
+    return entries, meta

@@ -3,8 +3,14 @@
 The container image does not ship hypothesis; rather than skip the property
 tests entirely we run each one over a fixed pseudo-random sample of the same
 strategy space (seeded, so failures reproduce). When hypothesis IS installed
-the real library is used instead — see the try/except import in each test
-module.
+the real library is used instead — see ``tests/_prop.py``, which also lets CI
+force this fallback (``REPRO_FORCE_HYPOTHESIS_FALLBACK=1``) so both paths
+exercise the same cases.
+
+Supported API surface: ``strategies.floats/integers/sampled_from/tuples/
+lists`` with ``.filter()`` chaining, ``@given``, ``@settings(max_examples=)``,
+``assume()`` (rejected draws are resampled, like the real library), and
+``@example(...)`` (explicit cases run before the random sweep).
 """
 
 from __future__ import annotations
@@ -12,6 +18,19 @@ from __future__ import annotations
 import random
 
 _MAX_EXAMPLES = 25  # fallback cap; the real library honours the caller's value
+_MAX_REJECTIONS = 10_000  # combined assume()/filter() rejection budget per test
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by assume(False); the current draw is discarded and resampled."""
+
+
+def assume(condition) -> bool:
+    """hypothesis.assume: reject the current example when ``condition`` is
+    falsy. The wrapper resamples instead of failing the test."""
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
 
 
 class _Strategy:
@@ -27,7 +46,7 @@ class _Strategy:
         return s
 
     def example(self, rng: random.Random):
-        for _ in range(10_000):
+        for _ in range(_MAX_REJECTIONS):
             v = self._gen(rng)
             if all(f(v) for f in self._filters):
                 return v
@@ -65,13 +84,41 @@ def settings(max_examples=_MAX_EXAMPLES, **_ignored):
     return deco
 
 
+def example(*args, **kwargs):
+    """hypothesis.example: pin an explicit case; runs before the random sweep
+    (applied below @given, exactly like the real decorator)."""
+
+    def deco(fn):
+        cases = list(getattr(fn, "_fallback_examples", ()))
+        # decorators apply bottom-up; prepend so the topmost @example runs first
+        fn._fallback_examples = [(args, kwargs)] + cases
+        return fn
+
+    return deco
+
+
 def given(*strategies):
     def deco(fn):
         def wrapper(*args, **kwargs):
             n = min(getattr(fn, "_fallback_max_examples", _MAX_EXAMPLES), _MAX_EXAMPLES)
+            # explicit @example cases first — these are regression pins, so an
+            # assume() rejection inside one is a test bug worth surfacing
+            for ex_args, ex_kwargs in getattr(fn, "_fallback_examples", ()):
+                fn(*args, *ex_args, **{**kwargs, **ex_kwargs})
             rng = random.Random(0)
-            for _ in range(n):
-                fn(*args, *(s.example(rng) for s in strategies), **kwargs)
+            runs = rejected = 0
+            while runs < n:
+                vals = tuple(s.example(rng) for s in strategies)
+                try:
+                    fn(*args, *vals, **kwargs)
+                except UnsatisfiedAssumption:
+                    rejected += 1
+                    if rejected > _MAX_REJECTIONS:
+                        raise ValueError(
+                            "assume() rejected every sample "
+                            f"({_MAX_REJECTIONS} draws)") from None
+                    continue
+                runs += 1
 
         # deliberately NOT functools.wraps: pytest must see the wrapper's
         # (self)-only signature, or it treats strategy params as fixtures

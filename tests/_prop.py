@@ -1,0 +1,33 @@
+"""One import point for property testing: real hypothesis when installed,
+the seeded fallback otherwise — and a switch to force the fallback.
+
+Every property-test module imports from here::
+
+    from _prop import USING_FALLBACK, assume, example, given, settings, st
+
+CI runs the suite twice: once with hypothesis installed (the default
+``.[test]`` environment) and once with ``REPRO_FORCE_HYPOTHESIS_FALLBACK=1``,
+so the fallback — the only engine available inside the hermetic container —
+keeps exercising exactly the same strategy definitions as the real library.
+"""
+
+from __future__ import annotations
+
+import os
+
+_FORCE = os.environ.get("REPRO_FORCE_HYPOTHESIS_FALLBACK", "") not in ("", "0")
+
+try:
+    if _FORCE:
+        raise ModuleNotFoundError("fallback forced via REPRO_FORCE_HYPOTHESIS_FALLBACK")
+    from hypothesis import assume, example, given, settings
+    from hypothesis import strategies as st
+
+    USING_FALLBACK = False
+except ModuleNotFoundError:
+    import _hypothesis_fallback as st
+    from _hypothesis_fallback import assume, example, given, settings
+
+    USING_FALLBACK = True
+
+__all__ = ["USING_FALLBACK", "assume", "example", "given", "settings", "st"]

@@ -1,0 +1,135 @@
+"""Determinism contracts: a seed fully determines every stochastic artifact.
+
+Traces are data (same seed -> byte-identical arrays), replays are exact
+functions of (scenario, trace, seed), and the batched simulator must produce
+the same departures whether the Lindley scan is jitted or interpreted —
+otherwise "reproduce the paper's Fig. 6" would silently depend on the JAX
+execution mode of the machine running it.
+"""
+
+import jax
+import numpy as np
+
+from repro.core.latency import NetworkPath, Tier, Workload
+from repro.core.scenario import EdgeSpec, Scenario
+from repro.fleet import (
+    ScenarioBatch,
+    drift_signal,
+    fleet_analytic,
+    make_trace,
+    mmpp_signal,
+    replay,
+    simulate_fleet,
+    step_signal,
+)
+
+
+def _scenario() -> Scenario:
+    return Scenario(
+        workload=Workload(arrival_rate=2.0, req_bytes=30_000, res_bytes=1_000),
+        device=Tier("dev", 0.150),
+        edges=(EdgeSpec(Tier("edge", 0.028)),),
+        network=NetworkPath(2.5e6),
+    )
+
+
+def _trace(seed: int = 7):
+    return make_trace(
+        120.0, 1.0,
+        bandwidth_Bps=lambda t: step_signal(t, [(0, 2.5e6), (40, 2.5e5), (80, 2.5e6)]),
+        arrival_rate=lambda t: drift_signal(t, 2.0, 6.0, jitter=0.1, seed=seed),
+        edge_bg_rate=[lambda t: mmpp_signal(t, 0.0, 20.0, seed=seed)],
+    )
+
+
+class TestTraceDeterminism:
+    def test_signal_generators_reproduce_from_seed(self):
+        t = np.arange(0.0, 200.0, 1.0)
+        for gen in (
+            lambda s: drift_signal(t, 1.0, 5.0, jitter=0.2, seed=s),
+            lambda s: mmpp_signal(t, 2.0, 30.0, seed=s),
+        ):
+            a, b, c = gen(3), gen(3), gen(4)
+            np.testing.assert_array_equal(a, b)
+            assert not np.array_equal(a, c), "different seeds must differ"
+
+    def test_step_signal_has_no_randomness(self):
+        t = np.arange(0.0, 100.0, 0.5)
+        pts = [(0, 20.0), (40, 2.0), (60, 20.0)]
+        np.testing.assert_array_equal(step_signal(t, pts), step_signal(t, pts))
+
+    def test_make_trace_reproduces_exactly(self):
+        a, b = _trace(7), _trace(7)
+        np.testing.assert_array_equal(a.times, b.times)
+        np.testing.assert_array_equal(a.bandwidth_Bps, b.bandwidth_Bps)
+        np.testing.assert_array_equal(a.arrival_rate, b.arrival_rate)
+        np.testing.assert_array_equal(a.edge_bg_rate, b.edge_bg_rate)
+
+
+class TestReplayDeterminism:
+    def test_same_seed_identical_scores_and_decisions(self):
+        scn, trace = _scenario(), _trace()
+        a = replay(scn, trace, seed=11)
+        b = replay(scn, trace, seed=11)
+        assert set(a.policies) == set(b.policies)
+        for name in a.policies:
+            np.testing.assert_array_equal(
+                a.policies[name].latencies_s, b.policies[name].latencies_s)
+            assert a.policies[name].targets == b.policies[name].targets
+        np.testing.assert_array_equal(a.est_bandwidth_Bps, b.est_bandwidth_Bps)
+        np.testing.assert_array_equal(a.est_arrival_rate, b.est_arrival_rate)
+        assert [d.edge_index for d in a.decisions] == [d.edge_index for d in b.decisions]
+
+    def test_different_seed_different_estimator_path(self):
+        # the telemetry sampling is the only stochastic input; a different
+        # seed must change the estimated-arrival trajectory
+        scn, trace = _scenario(), _trace()
+        a = replay(scn, trace, seed=11)
+        b = replay(scn, trace, seed=12)
+        assert not np.array_equal(a.est_arrival_rate, b.est_arrival_rate)
+
+    def test_policy_scores_identical_with_and_without_jit(self):
+        # replay scores via the numpy closed forms, but must also be immune
+        # to the global JAX mode of the process running it
+        scn, trace = _scenario(), _trace()
+        a = replay(scn, trace, seed=5)
+        with jax.disable_jit():
+            b = replay(scn, trace, seed=5)
+        for name in a.policies:
+            np.testing.assert_array_equal(
+                a.policies[name].latencies_s, b.policies[name].latencies_s)
+            assert a.policies[name].targets == b.policies[name].targets
+
+
+class TestFleetSimDeterminism:
+    def test_same_seed_identical_latencies(self):
+        batch = ScenarioBatch.from_scenarios(
+            _scenario().sweep("workload.arrival_rate", [1.0, 2.0, 3.0]))
+        a = simulate_fleet(batch, "edge[0]", n=4_000, seed=9)
+        b = simulate_fleet(batch, "edge[0]", n=4_000, seed=9)
+        np.testing.assert_array_equal(a.latencies, b.latencies)
+        np.testing.assert_array_equal(a.arrivals, b.arrivals)
+        c = simulate_fleet(batch, "edge[0]", n=4_000, seed=10)
+        assert not np.array_equal(a.latencies, c.latencies)
+
+    def test_jit_and_nojit_agree(self):
+        # n stays small: with jit disabled the Lindley scan runs interpreted
+        # (~50ms/step), and numerical identity doesn't need scale
+        batch = ScenarioBatch.from_scenarios(
+            _scenario().sweep("workload.arrival_rate", [1.5, 4.0]))
+        jitted = simulate_fleet(batch, "on_device", n=192, seed=3)
+        with jax.disable_jit():
+            eager = simulate_fleet(batch, "on_device", n=192, seed=3)
+        np.testing.assert_allclose(jitted.latencies, eager.latencies,
+                                   rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(jitted.mean, eager.mean, rtol=1e-12)
+
+    def test_analytic_vec_jit_and_nojit_agree(self):
+        batch = ScenarioBatch.from_scenarios(
+            _scenario().sweep("network.bandwidth_Bps", [2.5e5, 2.5e6, 2.5e7]))
+        jitted = fleet_analytic(batch)
+        with jax.disable_jit():
+            eager = fleet_analytic(batch)
+        np.testing.assert_allclose(jitted.t_dev, eager.t_dev, rtol=1e-12)
+        np.testing.assert_allclose(jitted.t_edge, eager.t_edge, rtol=1e-12)
+        np.testing.assert_array_equal(jitted.best_edge, eager.best_edge)

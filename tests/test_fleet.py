@@ -4,12 +4,7 @@ batched simulation, trace generators, and the §5 adaptive-replay result."""
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-except ModuleNotFoundError:
-    import _hypothesis_fallback as st
-    from _hypothesis_fallback import given, settings
+from _prop import given, settings, st
 
 from repro.core import (
     EdgeSpec,
@@ -133,6 +128,48 @@ class TestBatchPacking:
             ScenarioBatch.from_sweep(base, {"device.name": [1.0]})
         with pytest.raises(ScenarioError):
             ScenarioBatch.from_sweep(base, {"edges[3].tier.service_time_s": [0.1]})
+
+    def test_grid_row_order_contract_pinned_column_exact(self):
+        """THE row-matching contract: packing ``base.grid(axes)`` row by row
+        is COLUMN-IDENTICAL to ``from_sweep(base, axes)`` — same C order
+        (last axis fastest), same values, bit-for-bit. Previously this was
+        asserted only via latency agreement; pin the packed arrays directly
+        so a silent reordering in either constructor fails loudly here."""
+        base = _paper_point()
+        axes = {
+            "workload.arrival_rate": np.linspace(0.5, 6.0, 3),
+            "edges[0].tier.service_time_s": np.array([0.01, 0.03]),
+            "network.bandwidth_Bps": np.geomspace(2e5, 2e7, 4),
+        }
+        via_grid = ScenarioBatch.from_scenarios(base.grid(axes))
+        via_sweep = ScenarioBatch.from_sweep(base, axes)
+        assert via_grid.size == via_sweep.size == 3 * 2 * 4
+        for name, col in via_grid.arrays().items():
+            np.testing.assert_array_equal(
+                col, via_sweep.arrays()[name], err_msg=name, strict=True)
+        # and the C-order invariant itself: the LAST axis varies fastest
+        bw = via_sweep.bandwidth_Bps
+        assert np.array_equal(bw[:4], np.geomspace(2e5, 2e7, 4))
+        assert np.array_equal(bw, np.tile(np.geomspace(2e5, 2e7, 4), 6))
+        lam = via_sweep.lam
+        assert np.array_equal(lam, np.repeat(np.linspace(0.5, 6.0, 3), 8))
+
+    def test_from_sweep_rejects_invalid_later_values_like_grid(self):
+        # regression: only the FIRST axis value used to be probed, so a zero
+        # rate in position 2 was silently packed while grid() raised — the
+        # two constructors must reject exactly the same axes
+        base = _paper_point()
+        for axes in (
+            {"workload.arrival_rate": [5.0, 0.0]},
+            {"workload.arrival_rate": [5.0, -1.0]},
+            {"network.bandwidth_Bps": [1e6, float("nan")]},
+            {"workload.res_bytes": [1000.0, -5.0]},
+            {"edges[0].tier.service_time_s": [0.01, 0.0]},
+        ):
+            with pytest.raises(ScenarioError):
+                base.grid(axes)
+            with pytest.raises(ScenarioError):
+                ScenarioBatch.from_sweep(base, axes)
 
 
 class TestSweepErgonomics:

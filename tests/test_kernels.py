@@ -7,12 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-except ModuleNotFoundError:
-    import _hypothesis_fallback as st
-    from _hypothesis_fallback import given, settings
+from _prop import given, settings, st
 
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_reference

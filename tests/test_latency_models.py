@@ -3,12 +3,7 @@
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-except ModuleNotFoundError:
-    import _hypothesis_fallback as st
-    from _hypothesis_fallback import given, settings
+from _prop import given, settings, st
 
 from repro.core.latency import (
     NetworkPath,

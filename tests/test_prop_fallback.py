@@ -1,0 +1,90 @@
+"""The hypothesis fallback itself is load-bearing in the hermetic container —
+test its contract directly (independent of whether real hypothesis is
+installed), so both property-test engines keep running the same cases."""
+
+import pytest
+
+import _hypothesis_fallback as fb
+from _prop import USING_FALLBACK, given, settings, st
+
+
+def test_shim_reports_engine():
+    assert isinstance(USING_FALLBACK, bool)
+    assert callable(given) and callable(settings)
+    assert hasattr(st, "floats") and hasattr(st, "integers")
+
+
+def test_fallback_is_deterministic():
+    runs = []
+    for _ in range(2):
+        seen = []
+
+        @fb.given(fb.floats(0.0, 1.0), fb.integers(0, 9))
+        def inner(x, n):
+            seen.append((x, n))
+
+        inner()
+        runs.append(seen)
+    assert runs[0] == runs[1]
+    assert len(runs[0]) == fb._MAX_EXAMPLES
+
+
+def test_assume_resamples_instead_of_failing():
+    seen = []
+
+    @fb.given(fb.floats(0.0, 1.0))
+    @fb.settings(max_examples=10)
+    def inner(x):
+        fb.assume(x > 0.5)
+        seen.append(x)
+
+    inner()
+    assert len(seen) == 10
+    assert all(x > 0.5 for x in seen)
+
+
+def test_assume_exhaustion_is_loud():
+    @fb.given(fb.floats(0.0, 1.0))
+    @fb.settings(max_examples=5)
+    def inner(x):
+        fb.assume(False)
+
+    with pytest.raises(ValueError, match="assume"):
+        inner()
+
+
+def test_examples_run_first_in_declaration_order():
+    seen = []
+
+    @fb.given(fb.integers(0, 100))
+    @fb.example(7)
+    @fb.example(9)
+    @fb.settings(max_examples=4)
+    def inner(x):
+        seen.append(x)
+
+    inner()
+    assert seen[:2] == [7, 9]  # topmost @example first, like hypothesis
+    assert len(seen) == 2 + 4  # explicit cases don't consume the random budget
+
+
+def test_example_failure_propagates():
+    @fb.given(fb.integers(0, 100))
+    @fb.example(101)
+    def inner(x):
+        assert x <= 100
+
+    with pytest.raises(AssertionError):
+        inner()
+
+
+def test_filter_chaining_still_applies():
+    seen = []
+
+    @fb.given(fb.integers(0, 20).filter(lambda v: v % 2 == 0).filter(lambda v: v > 4))
+    @fb.settings(max_examples=8)
+    def inner(v):
+        seen.append(v)
+
+    inner()
+    assert all(v % 2 == 0 and v > 4 for v in seen)

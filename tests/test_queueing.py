@@ -5,12 +5,7 @@ import math
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings
-    from hypothesis import strategies as st
-except ModuleNotFoundError:
-    import _hypothesis_fallback as st
-    from _hypothesis_fallback import given, settings
+from _prop import assume, example, given, settings, st
 
 from repro.core import queueing as Q
 
@@ -109,3 +104,15 @@ class TestProperties:
         # deterministic service is the minimum-variance service
         lam, mu = lm
         assert Q.md1_wait(lam, mu) <= Q.mg1_wait(lam, mu, var) + 1e-12
+
+    @given(st.floats(0.01, 50.0), st.floats(0.01, 50.0), st.floats(0.1, 200.0))
+    @example(4.0, 8.0, 10.0)  # textbook pin: rho 0.4 vs 0.8 on Eq. 7
+    @settings(max_examples=200, deadline=None)
+    def test_wait_strictly_increasing_between_distinct_loads(self, lam_a, lam_b, mu):
+        # assume() runs identically under hypothesis and the seeded fallback:
+        # rejected draws are resampled, not failed
+        assume(abs(lam_a - lam_b) > 1e-3)
+        assume(max(lam_a, lam_b) < 0.95 * mu)
+        lo, hi = sorted((lam_a, lam_b))
+        assert Q.mm1_wait(lo, mu) < Q.mm1_wait(hi, mu)
+        assert Q.md1_wait(lo, mu) < Q.md1_wait(hi, mu)
