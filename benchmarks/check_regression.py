@@ -1,0 +1,215 @@
+"""Bench regression gate: fresh ``BENCH_*.json`` vs committed baselines.
+
+Each bench family's JSON artifact carries a few *headline* metrics — the
+numbers a perf or model regression would move. This tool compares a freshly
+produced artifact directory against the baselines committed under
+``benchmarks/baselines/``, prints a delta table, and exits nonzero when any
+headline regresses beyond its tolerance:
+
+  * ``higher``-is-better metrics (throughputs) regress when
+    ``fresh < baseline * (1 - tol)``;
+  * ``lower``-is-better metrics (MAPE, iteration counts) regress when
+    ``fresh > baseline * (1 + tol)``.
+
+Improvements never fail the gate (refresh the baselines when they stick).
+
+Absolute wall-clock throughputs (client-epochs/s, scenarios/s) are tagged
+``machine_bound``: they are gated only under ``--machine-matched``, i.e. when
+the fresh run and the baselines come from the same machine class — committed
+baselines travel with the repo, CI runners don't match the machine that
+recorded them, and a 2-3x hardware gap would otherwise fail every PR. In the
+default (portable) mode they still appear in the delta table as ``info``
+rows; the machine-insensitive headlines (speedups, MAPE, iteration counts,
+model means) are always gated.
+
+Usage:
+  python -m benchmarks.check_regression --fresh artifacts
+  python -m benchmarks.check_regression --fresh artifacts --machine-matched
+  python -m benchmarks.check_regression --fresh artifacts --update-baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_TOLERANCE = 0.30
+
+# family artifact -> {dotted metric path: (direction, tolerance or None,
+# machine_bound)}. tolerance None = the run's default; machine_bound metrics
+# (absolute wall-clock rates) gate only under --machine-matched. The 45%
+# machine-matched tolerance still trips on a synthetic 2x slowdown.
+HEADLINES: dict[str, dict[str, tuple[str, float | None, bool]]] = {
+    "BENCH_fleet.json": {
+        "analytic.vec_scenarios_per_sec": ("higher", 0.45, True),
+        "analytic.speedup": ("higher", None, False),
+        "crossover.speedup": ("higher", None, False),
+        "simulation.vec_jobs_per_sec": ("higher", 0.45, True),
+        "simulation.vec_vs_scalar_mean_gap": ("lower", None, False),
+    },
+    "BENCH_cluster.json": {
+        "closed_loop.client_epochs_per_sec": ("higher", 0.45, True),
+        "closed_loop.adaptive_mean_latency_s": ("lower", None, False),
+        "equilibrium.iterations": ("lower", None, False),
+    },
+    "BENCH_validate.json": {
+        "smoke_gate_mean_mape_pct": ("lower", None, False),
+    },
+    "BENCH_paper_figures.json": {
+        "fig2_mape_pct": ("lower", None, False),
+        "fig3_mape_pct": ("lower", None, False),
+    },
+}
+
+
+def resolve(doc: dict, path: str):
+    """Dotted-path lookup; None when any segment is missing."""
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def default_baseline_dir() -> Path:
+    return Path(__file__).resolve().parent / "baselines"
+
+
+def compare(
+    fresh_dir: Path,
+    baseline_dir: Path,
+    *,
+    tolerance: float = DEFAULT_TOLERANCE,
+    machine_matched: bool = False,
+) -> tuple[list[dict], int]:
+    """(rows, n_regressions) over every headline family.
+
+    Missing data is loud on BOTH sides: a family with a committed baseline
+    but no fresh artifact (a renamed file, a family dropped from the CI
+    ``--only`` list), a family produced fresh with no baseline, and a metric
+    absent from either side all count as regressions — silent shrinkage of
+    the gate is exactly what this tool exists to catch. Only a family absent
+    from both directories is skipped (not part of this comparison at all; a
+    deliberate partial run should point ``--fresh`` at a directory holding
+    just the families it wants compared AND baselined). ``machine_matched``
+    additionally gates the machine-bound (absolute wall-clock) headlines;
+    otherwise those are informational rows."""
+    rows: list[dict] = []
+    regressions = 0
+    for fname, metrics in sorted(HEADLINES.items()):
+        fresh_path = fresh_dir / fname
+        base_path = baseline_dir / fname
+        if not fresh_path.exists() and not base_path.exists():
+            continue
+        fresh = json.loads(fresh_path.read_text()) if fresh_path.exists() else {}
+        base = json.loads(base_path.read_text()) if base_path.exists() else {}
+        for metric, (direction, tol, machine_bound) in metrics.items():
+            tol = tolerance if tol is None else tol
+            gated = machine_matched or not machine_bound
+            f_val = resolve(fresh, metric)
+            b_val = resolve(base, metric)
+            if f_val is None or b_val is None:
+                rows.append({
+                    "family": fname, "metric": metric, "baseline": b_val,
+                    "fresh": f_val, "delta_pct": None, "tol_pct": tol * 100,
+                    "status": "MISSING",
+                })
+                regressions += 1
+                continue
+            f_val, b_val = float(f_val), float(b_val)
+            delta = (f_val - b_val) / b_val * 100.0 if b_val != 0 else float("inf")
+            if direction == "higher":
+                bad = f_val < b_val * (1.0 - tol)
+            else:
+                bad = f_val > b_val * (1.0 + tol)
+            if bad and gated:
+                regressions += 1
+                status = "REGRESSED"
+            elif not gated:
+                status = "info(slower)" if bad else "info"
+            else:
+                status = "ok"
+            rows.append({
+                "family": fname, "metric": metric, "baseline": b_val,
+                "fresh": f_val, "delta_pct": delta, "tol_pct": tol * 100,
+                "status": status,
+            })
+    return rows, regressions
+
+
+def print_table(rows: list[dict]) -> None:
+    if not rows:
+        print("no comparable BENCH_*.json families found")
+        return
+    print(f"{'family':26s} {'metric':42s} {'baseline':>12s} {'fresh':>12s} "
+          f"{'delta':>8s} {'tol':>6s}  status")
+    for r in rows:
+        base = "-" if r["baseline"] is None else f"{r['baseline']:.4g}"
+        fresh = "-" if r["fresh"] is None else f"{r['fresh']:.4g}"
+        delta = "-" if r["delta_pct"] is None else f"{r['delta_pct']:+.1f}%"
+        print(f"{r['family']:26s} {r['metric']:42s} {base:>12s} {fresh:>12s} "
+              f"{delta:>8s} {r['tol_pct']:5.0f}%  {r['status']}")
+
+
+def update_baselines(fresh_dir: Path, baseline_dir: Path) -> list[str]:
+    """Copy every known family artifact from ``fresh_dir`` into the baseline
+    directory (whole files, so future headline additions have data)."""
+    baseline_dir.mkdir(parents=True, exist_ok=True)
+    copied = []
+    for fname in HEADLINES:
+        src = fresh_dir / fname
+        if src.exists():
+            (baseline_dir / fname).write_text(src.read_text())
+            copied.append(fname)
+    return copied
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--fresh", type=Path, default=Path("artifacts"),
+                    help="directory with freshly produced BENCH_*.json")
+    ap.add_argument("--baselines", type=Path, default=default_baseline_dir(),
+                    help="committed baseline directory (default benchmarks/baselines)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="default relative tolerance (default 0.30 = ±30%%); "
+                         "per-metric overrides in HEADLINES still apply")
+    ap.add_argument("--machine-matched", action="store_true",
+                    help="also gate the absolute wall-clock throughputs (use "
+                         "when baselines were recorded on this machine class)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="replace the baselines with the fresh artifacts and exit")
+    args = ap.parse_args(argv)
+
+    if not args.fresh.is_dir():
+        print(f"error: fresh artifact directory {args.fresh} does not exist",
+              file=sys.stderr)
+        return 2
+    if args.update_baselines:
+        copied = update_baselines(args.fresh, args.baselines)
+        if not copied:
+            print(f"error: no known BENCH_*.json in {args.fresh}", file=sys.stderr)
+            return 2
+        print(f"updated baselines: {', '.join(copied)} -> {args.baselines}")
+        return 0
+
+    rows, regressions = compare(args.fresh, args.baselines,
+                                tolerance=args.tolerance,
+                                machine_matched=args.machine_matched)
+    print_table(rows)
+    if not rows:
+        print("error: nothing compared — wrong --fresh directory?", file=sys.stderr)
+        return 2
+    if regressions:
+        print(f"\n{regressions} headline metric(s) regressed beyond tolerance",
+              file=sys.stderr)
+        return 1
+    print(f"\nall {len(rows)} headline metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

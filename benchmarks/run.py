@@ -6,9 +6,15 @@ JSON artifact under ``--out``:
 
   * ``paper_figures`` -> BENCH_paper_figures.json (per-figure headline numbers)
   * ``fleet``         -> BENCH_fleet.json (scalar-vs-vectorized throughput)
+  * ``cluster``       -> BENCH_cluster.json (closed-loop client-epochs/s +
+                         equilibrium iterations)
   * ``validate``      -> BENCH_validate.json (fidelity-gate cost + headline MAPE)
   * ``kernels``       -> CSV rows only (interpret-mode correctness latency)
   * ``roofline``      -> CSV rows from dry-run artifacts, when present
+
+An unknown ``--only`` family is an error (nonzero exit, known families
+listed) — CI relies on that exit code, so a typo can never silently run
+nothing and upload an empty artifact as green.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run --out experiments/bench
@@ -19,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 from pathlib import Path
 
 
@@ -55,6 +62,12 @@ def run_fleet(out_dir: Path) -> dict:
     return fleet_rows(out_dir)
 
 
+def run_cluster(out_dir: Path) -> dict:
+    from .cluster_bench import cluster_rows
+
+    return cluster_rows(out_dir)
+
+
 def run_validate(out_dir: Path) -> dict:
     from .validate_bench import validate_rows
 
@@ -75,6 +88,7 @@ BENCHES = {
     "paper_figures": run_paper_figures,
     "kernels": run_kernels,
     "fleet": run_fleet,
+    "cluster": run_cluster,
     "validate": run_validate,
     "roofline": run_roofline,
 }
@@ -82,11 +96,22 @@ BENCHES = {
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--only", action="append", choices=sorted(BENCHES),
-                    help="run only these bench families (repeatable; default all)")
+    # families are validated by hand (not argparse choices) so an unknown
+    # name exits nonzero with the registry listed — and stays that way as
+    # the registry grows, instead of silently running nothing
+    ap.add_argument("--only", action="append", metavar="FAMILY",
+                    help="run only these bench families (repeatable; default all; "
+                         f"known: {', '.join(sorted(BENCHES))})")
     ap.add_argument("--out", type=Path, default=Path("experiments/bench"),
                     help="directory for JSON artifacts")
     args = ap.parse_args(argv)
+
+    unknown = [n for n in (args.only or []) if n not in BENCHES]
+    if unknown:
+        print(f"error: unknown bench famil{'y' if len(unknown) == 1 else 'ies'} "
+              f"{', '.join(repr(n) for n in unknown)} "
+              f"(known: {', '.join(sorted(BENCHES))})", file=sys.stderr)
+        return 2
 
     names = args.only or list(BENCHES)
     args.out.mkdir(parents=True, exist_ok=True)

@@ -25,14 +25,22 @@ from .crossover import (
     solve_crossover,
     tenancy_crossover,
 )
-from .manager import ON_DEVICE, AdaptiveOffloadManager, Decision, EdgeServerState
+from .manager import (
+    ON_DEVICE,
+    AdaptiveOffloadManager,
+    Decision,
+    EdgeServerState,
+    apply_decision_rule,
+)
 from .multitenant import (
     AggregateLoad,
     TenantStream,
     aggregate_streams,
+    mixture_moments,
     multitenant_edge_latency,
 )
 from .scenario import (
+    ClusterSpec,
     EdgeSpec,
     Scenario,
     ScenarioError,

@@ -30,9 +30,51 @@ from .latency import (
 )
 from .telemetry import TelemetrySnapshot
 
-__all__ = ["EdgeServerState", "Decision", "AdaptiveOffloadManager"]
+__all__ = ["EdgeServerState", "Decision", "AdaptiveOffloadManager", "apply_decision_rule"]
 
 ON_DEVICE = -1  # sentinel edge index for local execution
+
+
+def apply_decision_rule(
+    t_dev: float,
+    t_edges: Sequence[float],
+    *,
+    last_index: int | None = None,
+    hysteresis: float = 0.0,
+) -> tuple[int, float]:
+    """Algorithm 1 lines 7-11 (+ the hysteresis extension) as a pure function.
+
+    Given the per-strategy latency predictions, returns ``(choice,
+    predicted)`` where ``choice`` is ``ON_DEVICE`` or an edge index.
+    On-device wins exact ties (line 7's ``<=``), matching
+    ``FleetPrediction.best_edge``'s first-argmin convention. This is THE
+    selection rule: ``AdaptiveOffloadManager.decide`` calls it per epoch and
+    ``repro.fleet.cluster`` is its (N,)-array transcription — a coherence
+    test pins the two together so the scalar and vectorized decision paths
+    cannot drift apart.
+    """
+    if t_edges and np.isfinite(min(t_edges)):
+        best_edge = int(np.argmin(t_edges))
+        best_edge_t = float(t_edges[best_edge])
+    else:
+        best_edge, best_edge_t = ON_DEVICE, np.inf
+
+    if t_dev <= best_edge_t:  # line 7
+        choice, predicted = ON_DEVICE, t_dev  # line 8
+    else:
+        choice, predicted = best_edge, best_edge_t  # lines 10-11
+
+    # beyond-paper hysteresis: keep the previous target unless the new one
+    # improves by more than `hysteresis` relative.
+    if hysteresis > 0.0 and last_index is not None and choice != last_index:
+        prev_t = (
+            t_dev
+            if last_index == ON_DEVICE
+            else (t_edges[last_index] if last_index < len(t_edges) else np.inf)
+        )
+        if np.isfinite(prev_t) and predicted > (1.0 - hysteresis) * prev_t:
+            choice, predicted = last_index, float(prev_t)
+    return choice, float(predicted)
 
 
 @dataclass(frozen=True)
@@ -143,36 +185,12 @@ class AdaptiveOffloadManager:
         t_edges = tuple(
             self._predict_edge(e, wl, lam_dev, snapshot.bandwidth_Bps) for e in edges
         )
-
-        if t_edges and np.isfinite(min(t_edges)):
-            best_edge = int(np.argmin(t_edges))
-            best_edge_t = t_edges[best_edge]
-        else:
-            best_edge, best_edge_t = ON_DEVICE, np.inf
-
-        if t_dev <= best_edge_t:  # line 7
-            choice, predicted = ON_DEVICE, t_dev  # line 8
-        else:
-            choice, predicted = best_edge, best_edge_t  # lines 10-11
-
-        # beyond-paper hysteresis: keep the previous target unless the new one
-        # improves by more than `hysteresis` relative.
-        if (
-            self.hysteresis > 0.0
-            and self._last is not None
-            and choice != self._last.edge_index
-        ):
-            prev_t = (
-                t_dev
-                if self._last.edge_index == ON_DEVICE
-                else (
-                    t_edges[self._last.edge_index]
-                    if self._last.edge_index < len(t_edges)
-                    else np.inf
-                )
-            )
-            if np.isfinite(prev_t) and predicted > (1.0 - self.hysteresis) * prev_t:
-                choice, predicted = self._last.edge_index, prev_t
+        choice, predicted = apply_decision_rule(
+            t_dev,
+            t_edges,
+            last_index=None if self._last is None else self._last.edge_index,
+            hysteresis=self.hysteresis,
+        )
 
         decision = Decision(
             strategy="on_device" if choice == ON_DEVICE else "offload",

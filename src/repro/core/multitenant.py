@@ -14,7 +14,13 @@ import numpy as np
 
 from .latency import NetworkPath, ServiceModel, Tier, Workload, edge_offload_latency
 
-__all__ = ["TenantStream", "AggregateLoad", "aggregate_streams", "multitenant_edge_latency"]
+__all__ = [
+    "TenantStream",
+    "AggregateLoad",
+    "aggregate_streams",
+    "mixture_moments",
+    "multitenant_edge_latency",
+]
 
 
 @dataclass(frozen=True)
@@ -41,6 +47,33 @@ class AggregateLoad:
         return 1.0 / self.service_mean_s
 
 
+def mixture_moments(rates, means, variances):
+    """Vectorized §3.4 aggregation: the mixture's (rate, mean, variance).
+
+    Reduces over the LAST axis — for ``(..., m)`` inputs of per-stream rates,
+    service means, and within-stream variances, returns ``(lam_tot, mean_mix,
+    var_mix)`` with shape ``(...)``: Poisson-superposition total rate, the
+    rate-weighted mean, and the law-of-total-variance mixture variance. A
+    zero total rate yields ``(0, 0, 0)`` (no load, not an error) so closed
+    loops with momentarily-idle edges stay finite; :func:`aggregate_streams`
+    is the validated scalar form built on top of this.
+    """
+    rates = np.asarray(rates, dtype=np.float64)
+    means = np.asarray(means, dtype=np.float64)
+    variances = np.asarray(variances, dtype=np.float64)
+    lam_tot = rates.sum(axis=-1)
+    safe = np.where(lam_tot > 0, lam_tot, 1.0)
+    mean_mix = (rates * means).sum(axis=-1) / safe
+    second = (rates * (variances + means**2)).sum(axis=-1) / safe
+    var_mix = np.maximum(0.0, second - mean_mix**2)
+    zero = lam_tot <= 0
+    return (
+        lam_tot,
+        np.where(zero, 0.0, mean_mix),
+        np.where(zero, 0.0, var_mix),
+    )
+
+
 def aggregate_streams(streams: Sequence[TenantStream]) -> AggregateLoad:
     """Poisson superposition + mixture moments (paper §3.4).
 
@@ -51,16 +84,15 @@ def aggregate_streams(streams: Sequence[TenantStream]) -> AggregateLoad:
     """
     if not streams:
         raise ValueError("need at least one tenant stream")
-    lam_edge = float(sum(t.arrival_rate for t in streams))
-    if lam_edge <= 0:
+    if sum(t.arrival_rate for t in streams) <= 0:
         raise ValueError("aggregate arrival rate must be positive")
-    weights = np.array([t.arrival_rate / lam_edge for t in streams])
-    means = np.array([t.service_mean_s for t in streams])
-    variances = np.array([t.service_var for t in streams])
-    s_edge = float(weights @ means)
-    second_moment = float(weights @ (variances + means**2))
-    var = max(0.0, second_moment - s_edge**2)
-    return AggregateLoad(lam_edge, s_edge, var, lam_edge * s_edge)
+    lam_edge, s_edge, var = mixture_moments(
+        [t.arrival_rate for t in streams],
+        [t.service_mean_s for t in streams],
+        [t.service_var for t in streams],
+    )
+    return AggregateLoad(float(lam_edge), float(s_edge), float(var),
+                         float(lam_edge) * float(s_edge))
 
 
 def multitenant_edge_latency(

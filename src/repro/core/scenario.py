@@ -53,6 +53,7 @@ __all__ = [
     "ScenarioError",
     "EdgeSpec",
     "Scenario",
+    "ClusterSpec",
     "ScenarioPrediction",
     "analytic",
     "simulate",
@@ -468,6 +469,102 @@ class Scenario:
 
     def crossovers(self, axis: str, **kwargs) -> Crossover:
         return crossovers(self, axis, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec: N clients sharing one edge pool (closed-loop §6 setting)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """N clients contending for the ``base`` scenario's edge servers.
+
+    ``base`` is the per-client template: its device tier, workload payloads,
+    network path, and ``edges`` (the shared pool every client may offload to).
+    ``arrival_scale`` optionally gives each client its own multiplier on the
+    template arrival rate (empty = homogeneous fleet). The closed-loop
+    semantics — each client's offload decision adds its stream to the chosen
+    edge's aggregate, which every other client then observes — live in
+    :mod:`repro.fleet.cluster`; this spec is the validated, serialisable
+    description they consume, exactly as :class:`Scenario` is for the
+    open-loop paths.
+    """
+
+    base: Scenario
+    n_clients: int
+    arrival_scale: tuple[float, ...] = ()
+    name: str = "cluster"
+
+    def __post_init__(self):
+        if not isinstance(self.arrival_scale, tuple):
+            object.__setattr__(self, "arrival_scale", tuple(self.arrival_scale))
+        _require(isinstance(self.base, Scenario), "base",
+                 f"expected a Scenario, got {type(self.base).__name__}")
+        _require(bool(self.base.edges), "base.edges",
+                 "a cluster needs at least one shared edge server")
+        _require(
+            isinstance(self.n_clients, (int, np.integer))
+            and not isinstance(self.n_clients, bool)
+            and self.n_clients >= 1,
+            "n_clients", f"must be a positive integer, got {self.n_clients!r}")
+        if self.arrival_scale:
+            _require(len(self.arrival_scale) == self.n_clients, "arrival_scale",
+                     f"length {len(self.arrival_scale)} != n_clients {self.n_clients}")
+            for i, s in enumerate(self.arrival_scale):
+                _require(bool(np.isfinite(s)) and s > 0, f"arrival_scale[{i}]",
+                         f"must be positive and finite, got {s!r}")
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.base.edges)
+
+    def arrival_rates(self) -> np.ndarray:
+        """(N,) per-client true arrival rates (template rate x scale)."""
+        scale = np.asarray(self.arrival_scale, dtype=np.float64) \
+            if self.arrival_scale else np.ones(self.n_clients)
+        return self.base.workload.arrival_rate * scale
+
+    def client(self, i: int) -> Scenario:
+        """Client ``i``'s open-loop view (its own arrival rate, the shared
+        edge pool, no other clients). Carries ``allow_unstable=True`` — the
+        whole point of the closed loop is that the pool can saturate when
+        everyone piles onto one edge, and the closed forms report that as
+        ``inf`` rather than refusing the spec."""
+        if not 0 <= i < self.n_clients:
+            raise ScenarioError("n_clients", f"client index {i} out of range "
+                                f"(n_clients {self.n_clients})")
+        scn = self.base if self.base.allow_unstable else \
+            replace(self.base, allow_unstable=True)
+        lam = float(self.arrival_rates()[i])
+        if lam != scn.workload.arrival_rate:
+            scn = scn.replaced("workload.arrival_rate", lam)
+        return scn
+
+    def to_dict(self) -> dict:
+        """Plain-JSON dict; ``from_dict(to_dict(spec)) == spec``."""
+        return {
+            "name": self.name,
+            "base": self.base.to_dict(),
+            "n_clients": int(self.n_clients),
+            "arrival_scale": list(self.arrival_scale),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ClusterSpec":
+        try:
+            base = d["base"]
+            n_clients = d["n_clients"]
+        except (KeyError, TypeError):
+            missing = "base" if not isinstance(d, Mapping) or "base" not in d \
+                else "n_clients"
+            raise ScenarioError(missing, "missing required field") from None
+        return cls(
+            base=Scenario.from_dict(base),
+            n_clients=int(n_clients),
+            arrival_scale=tuple(float(s) for s in d.get("arrival_scale", [])),
+            name=d.get("name", "cluster"),
+        )
 
 
 # ---------------------------------------------------------------------------

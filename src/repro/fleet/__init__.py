@@ -11,7 +11,9 @@ and for operating points that *move*:
     Lindley-recursion tandem-queue simulation as one `lax.scan` launch;
   * :mod:`traces` + :func:`replay` — §5-style dynamic conditions scored
     against adaptive vs static offloading policies via the same
-    ``AdaptiveOffloadManager.step()`` hook the serving gateway uses.
+    ``AdaptiveOffloadManager.step()`` hook the serving gateway uses;
+  * :mod:`cluster` — the closed loop: N clients sharing E edges, endogenous
+    edge load, fixed-point equilibria, and an event-driven cross-check.
 """
 
 from .analytic_vec import (
@@ -25,8 +27,27 @@ from .analytic_vec import (
     mmk_wait_erlang_vec,
 )
 from .batch import MODEL_CODES, SWEEPABLE_PATHS, ScenarioBatch
+from .cluster import (
+    ClusterPolicyResult,
+    ClusterResult,
+    Equilibrium,
+    cross_check_equilibrium,
+    induced_scenario,
+    predict_decisions,
+    simulate_cluster,
+    solve_equilibrium,
+)
+from .policy import bg_template, clamp_saturation, parse_policy, true_latency
 from .replay import PolicyResult, ReplayResult, replay
 from .sim_vec import FleetSimResult, lindley_station, simulate_fleet
-from .traces import Trace, drift_signal, epoch_times, make_trace, mmpp_signal, step_signal
+from .traces import (
+    Trace,
+    TraceBatch,
+    drift_signal,
+    epoch_times,
+    make_trace,
+    mmpp_signal,
+    step_signal,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,85 @@
+"""Shared decision/scoring core for the trace replays (§5) and the
+closed-loop cluster simulator (§6).
+
+Both :mod:`repro.fleet.replay` (one client, exogenous conditions) and
+:mod:`repro.fleet.cluster` (N clients, endogenous edge load) answer the same
+two questions every epoch:
+
+  * what would each static policy name mean as a target index, and
+  * what does a chosen target actually cost under the TRUE conditions?
+
+This module is the single home for those answers — policy-label parsing (via
+``scenario.parse_strategy``, the one label parser), the per-edge background
+*template* (the service-moment mixture a churned load report is re-expanded
+with), the closed-form true-condition scoring of one target, and the bounded
+saturation penalty that keeps policy means comparable across epochs that
+cross a stability boundary.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.latency import NetworkPath, edge_offload_latency, on_device_latency
+from repro.core.manager import ON_DEVICE
+from repro.core.multitenant import TenantStream, aggregate_streams, multitenant_edge_latency
+from repro.core.scenario import Scenario, ScenarioError, implied_service_var, parse_strategy
+
+__all__ = ["parse_policy", "bg_template", "true_latency", "clamp_saturation"]
+
+
+def parse_policy(name: str, n_edges: int) -> int:
+    """Static policy label -> target index (``ON_DEVICE`` or an edge index).
+
+    Thin wrapper over :func:`repro.core.scenario.parse_strategy` so replay
+    and cluster policies fail exactly like every other strategy label, with
+    the error renamed to the ``policies`` field the caller passed."""
+    try:
+        return parse_strategy(name, n_edges)
+    except ScenarioError as err:
+        raise ScenarioError("policies", str(err)) from None
+
+
+def bg_template(scn: Scenario, j: int) -> tuple[float, float, float]:
+    """(rate, mean, var) of edge j's spec background aggregate; tenant churn
+    scales the rate while preserving the mixture's service moments. Edges
+    declared without background churn homogeneous copies of the edge's own
+    service (the paper's §4.8 setup)."""
+    e = scn.edges[j]
+    if e.background:
+        agg = aggregate_streams(e.background)
+        return agg.arrival_rate, agg.service_mean_s, agg.service_var
+    return 0.0, e.tier.service_time_s, implied_service_var(e.tier)
+
+
+def true_latency(
+    scn: Scenario, target: int, bw: float, lam: float, bg_rates: np.ndarray,
+    templates: Sequence[tuple[float, float, float]],
+) -> float:
+    """Closed-form latency of ``target`` under the true epoch conditions."""
+    wl = replace(scn.workload, arrival_rate=float(lam))
+    if target == ON_DEVICE:
+        return float(np.asarray(on_device_latency(wl, scn.device)))
+    e = scn.edges[target]
+    net = NetworkPath(bw) if e.bandwidth_Bps is None else NetworkPath(e.bandwidth_Bps)
+    rate = float(bg_rates[target])
+    _, mean, var = templates[target]
+    if rate > 0:
+        streams = (e.own_stream(wl), TenantStream(rate, mean, var))
+        return float(np.asarray(multitenant_edge_latency(
+            wl, e.tier, net, streams, return_results=scn.return_results)))
+    return float(np.asarray(edge_offload_latency(
+        wl, e.tier, net, return_results=scn.return_results)))
+
+
+def clamp_saturation(latencies: np.ndarray, penalty_s: float) -> tuple[np.ndarray, int]:
+    """Replace non-finite / beyond-penalty epoch latencies with the bounded
+    saturation penalty. One epoch of saturation accrues a bounded backlog, and
+    bounded penalties keep policy means comparable. Returns the clamped array
+    and the number of clamped entries."""
+    lat = np.asarray(latencies, dtype=np.float64)
+    saturated = ~np.isfinite(lat) | (lat > penalty_s)
+    return np.where(saturated, penalty_s, lat), int(saturated.sum())

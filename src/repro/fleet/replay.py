@@ -27,12 +27,12 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.latency import NetworkPath, edge_offload_latency, on_device_latency
-from repro.core.manager import ON_DEVICE, AdaptiveOffloadManager, Decision
-from repro.core.multitenant import TenantStream, aggregate_streams, multitenant_edge_latency
-from repro.core.scenario import Scenario, ScenarioError, implied_service_var
+from repro.core.manager import AdaptiveOffloadManager, Decision
+from repro.core.multitenant import TenantStream
+from repro.core.scenario import Scenario, ScenarioError
 from repro.core.telemetry import EwmaEstimator, SlidingRateEstimator
 
+from .policy import bg_template, clamp_saturation, parse_policy, true_latency
 from .traces import Trace
 
 __all__ = ["PolicyResult", "ReplayResult", "replay"]
@@ -76,48 +76,6 @@ class ReplayResult:
         )
 
 
-def _bg_template(scn: Scenario, j: int) -> tuple[float, float, float]:
-    """(rate, mean, var) of edge j's spec background aggregate; tenant churn
-    scales the rate while preserving the mixture's service moments. Edges
-    declared without background churn homogeneous copies of the edge's own
-    service (the paper's §4.8 setup)."""
-    e = scn.edges[j]
-    if e.background:
-        agg = aggregate_streams(e.background)
-        return agg.arrival_rate, agg.service_mean_s, agg.service_var
-    return 0.0, e.tier.service_time_s, implied_service_var(e.tier)
-
-
-def _true_latency(
-    scn: Scenario, target: int, bw: float, lam: float, bg_rates: np.ndarray,
-    templates: Sequence[tuple[float, float, float]],
-) -> float:
-    """Closed-form latency of ``target`` under the true epoch conditions."""
-    wl = replace(scn.workload, arrival_rate=float(lam))
-    if target == ON_DEVICE:
-        return float(np.asarray(on_device_latency(wl, scn.device)))
-    e = scn.edges[target]
-    net = NetworkPath(bw) if e.bandwidth_Bps is None else NetworkPath(e.bandwidth_Bps)
-    rate = float(bg_rates[target])
-    _, mean, var = templates[target]
-    if rate > 0:
-        streams = (e.own_stream(wl), TenantStream(rate, mean, var))
-        return float(np.asarray(multitenant_edge_latency(
-            wl, e.tier, net, streams, return_results=scn.return_results)))
-    return float(np.asarray(edge_offload_latency(
-        wl, e.tier, net, return_results=scn.return_results)))
-
-
-def _parse_policy(name: str, n_edges: int) -> int:
-    if name == "on_device":
-        return ON_DEVICE
-    if name.startswith("edge[") and name.endswith("]"):
-        j = int(name[5:-1])
-        if 0 <= j < n_edges:
-            return j
-    raise ScenarioError("policies", f"unknown static policy {name!r}")
-
-
 def replay(
     scn: Scenario,
     trace: Trace,
@@ -144,11 +102,11 @@ def replay(
             "trace", f"trace has {trace.n_edges} edge columns but the scenario "
             f"has {len(scn.edges)} edges")
     static_targets = {
-        name: _parse_policy(name, len(scn.edges))
+        name: parse_policy(name, len(scn.edges))
         for name in policies if name != "adaptive"
     }
     run_adaptive = "adaptive" in policies
-    templates = [_bg_template(scn, j) for j in range(len(scn.edges))]
+    templates = [bg_template(scn, j) for j in range(len(scn.edges))]
     # a trace without edge columns means "no churn", not "no tenants": the
     # spec's declared background rates hold for every epoch
     spec_bg = np.array([t[0] for t in templates])
@@ -210,15 +168,11 @@ def replay(
     results: dict[str, PolicyResult] = {}
     for name, targets in chosen.items():
         lats = np.empty(t_n)
-        saturated = 0
         for i, tgt in enumerate(targets):
             bg_true = trace.edge_bg_rate[i] if trace.n_edges else spec_bg
-            lat = _true_latency(scn, tgt, float(trace.bandwidth_Bps[i]),
-                                float(trace.arrival_rate[i]), bg_true, templates)
-            if not np.isfinite(lat) or lat > saturation_penalty_s:
-                lat = saturation_penalty_s
-                saturated += 1
-            lats[i] = lat
+            lats[i] = true_latency(scn, tgt, float(trace.bandwidth_Bps[i]),
+                                   float(trace.arrival_rate[i]), bg_true, templates)
+        lats, saturated = clamp_saturation(lats, saturation_penalty_s)
         results[name] = PolicyResult(
             name=name, latencies_s=lats, targets=tuple(targets),
             saturated_epochs=saturated,

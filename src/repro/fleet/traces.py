@@ -24,7 +24,15 @@ from typing import Sequence
 
 import numpy as np
 
-__all__ = ["Trace", "epoch_times", "step_signal", "drift_signal", "mmpp_signal", "make_trace"]
+__all__ = [
+    "Trace",
+    "TraceBatch",
+    "epoch_times",
+    "step_signal",
+    "drift_signal",
+    "mmpp_signal",
+    "make_trace",
+]
 
 
 @dataclass(frozen=True)
@@ -76,6 +84,103 @@ class Trace:
     @property
     def epoch_s(self) -> float:
         return float(self.times[1] - self.times[0])
+
+
+@dataclass(frozen=True)
+class TraceBatch:
+    """Per-client condition traces for a closed-loop cluster replay.
+
+    The N-client generalisation of :class:`Trace`: every client sees its own
+    measured bandwidth and arrival rate, while ``edge_bg_rate`` is the
+    *exogenous* (non-cluster) background load per shared edge — the
+    endogenous part, what the other N-1 clients offload, is produced by the
+    closed loop itself (:mod:`repro.fleet.cluster`), never by a trace.
+    """
+
+    times: np.ndarray  # (T,) epoch start times, uniformly spaced
+    bandwidth_Bps: np.ndarray  # (T, N) per-client measured bandwidth
+    arrival_rate: np.ndarray  # (T, N) per-client request rate lambda
+    edge_bg_rate: np.ndarray  # (T, E) exogenous background rate per edge
+
+    def __post_init__(self):
+        t = np.asarray(self.times, dtype=np.float64)
+        object.__setattr__(self, "times", t)
+        for name in ("bandwidth_Bps", "arrival_rate", "edge_bg_rate"):
+            object.__setattr__(self, name,
+                               np.asarray(getattr(self, name), dtype=np.float64))
+        if t.ndim != 1 or len(t) < 2:
+            raise ValueError("trace batch needs at least two epochs")
+        dts = np.diff(t)
+        if not np.allclose(dts, dts[0]) or dts[0] <= 0:
+            raise ValueError("trace epochs must be uniformly spaced and increasing")
+        for name in ("bandwidth_Bps", "arrival_rate", "edge_bg_rate"):
+            arr = getattr(self, name)
+            if arr.ndim != 2 or arr.shape[0] != len(t):
+                raise ValueError(f"{name} must be (n_epochs, ...) 2-D with "
+                                 f"{len(t)} rows, got shape {arr.shape}")
+        if self.bandwidth_Bps.shape != self.arrival_rate.shape:
+            raise ValueError("bandwidth_Bps and arrival_rate must agree on "
+                             "(n_epochs, n_clients)")
+        if self.n_clients < 1:
+            raise ValueError("trace batch needs at least one client column")
+        if np.any(self.bandwidth_Bps <= 0):
+            raise ValueError("bandwidth must be positive everywhere")
+        if np.any(self.arrival_rate <= 0):
+            raise ValueError("arrival rate must be positive everywhere")
+        if np.any(self.edge_bg_rate < 0):
+            raise ValueError("background rates must be non-negative")
+
+    @property
+    def n_epochs(self) -> int:
+        return int(len(self.times))
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.bandwidth_Bps.shape[1])
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.edge_bg_rate.shape[1])
+
+    @property
+    def epoch_s(self) -> float:
+        return float(self.times[1] - self.times[0])
+
+    @classmethod
+    def from_trace(cls, trace: Trace, n_clients: int) -> "TraceBatch":
+        """Broadcast one single-client trace over ``n_clients`` identical
+        columns (every client measures the same conditions)."""
+        if n_clients < 1:
+            raise ValueError("n_clients must be positive")
+        tile = np.repeat(trace.bandwidth_Bps[:, None], n_clients, axis=1)
+        lam = np.repeat(trace.arrival_rate[:, None], n_clients, axis=1)
+        return cls(times=trace.times, bandwidth_Bps=tile, arrival_rate=lam,
+                   edge_bg_rate=trace.edge_bg_rate)
+
+    @classmethod
+    def from_traces(cls, traces: Sequence[Trace]) -> "TraceBatch":
+        """Stack N per-client traces column-wise.
+
+        All traces must share the same epoch grid, and — because the
+        exogenous edge background is a property of the shared pool, not of
+        any one client — identical ``edge_bg_rate`` columns."""
+        if not traces:
+            raise ValueError("need at least one trace")
+        first = traces[0]
+        for k, tr in enumerate(traces[1:], start=1):
+            if not np.array_equal(tr.times, first.times):
+                raise ValueError(f"trace {k} has a different epoch grid")
+            if not np.array_equal(tr.edge_bg_rate, first.edge_bg_rate):
+                raise ValueError(
+                    f"trace {k} disagrees on the exogenous edge background; "
+                    "the shared pool has ONE background, per-client bg traces "
+                    "are not meaningful")
+        return cls(
+            times=first.times,
+            bandwidth_Bps=np.stack([tr.bandwidth_Bps for tr in traces], axis=1),
+            arrival_rate=np.stack([tr.arrival_rate for tr in traces], axis=1),
+            edge_bg_rate=first.edge_bg_rate,
+        )
 
 
 def epoch_times(duration_s: float, epoch_s: float) -> np.ndarray:

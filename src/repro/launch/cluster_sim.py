@@ -1,0 +1,195 @@
+"""Closed-loop cluster CLI: N adaptive clients sharing E edge servers.
+
+Runs the three §6-style closed-loop questions from one command:
+
+  * **equilibrium** — solve the fixed point of the decision->load map under
+    the spec's nominal conditions (who lands where, per-edge utilization,
+    how many best-response iterations);
+  * **replay** — drive the fleet through a bandwidth-step trace with the
+    estimator-lagged adaptive manager per client, scored against every
+    all-clients static policy under the true conditions;
+  * **cross-check** (``--cross-check``) — validate the closed-loop analytic
+    means against the event-driven simulators, the PR 3 differential
+    pattern applied to the equilibrium assignment.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.cluster_sim --clients 64 \
+      --duration 180 --bw-drop 0.15 --out experiments/CLUSTER.json
+  PYTHONPATH=src python -m repro.launch.cluster_sim --cluster spec.json \
+      --cross-check
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.latency import NetworkPath, ServiceModel, Tier, Workload
+from repro.core.scenario import ClusterSpec, EdgeSpec, Scenario
+from repro.fleet import (
+    cross_check_equilibrium,
+    make_trace,
+    simulate_cluster,
+    solve_equilibrium,
+    step_signal,
+)
+
+__all__ = ["default_cluster", "main"]
+
+
+def default_cluster(n_clients: int = 64) -> ClusterSpec:
+    """The acceptance-criteria cluster: N Orin-class clients at 2 rps each
+    contending for four heterogeneous edge tiers over a 20 Mbit path. Sized
+    so no single edge can absorb the whole fleet (every all-on-one-edge
+    static saturates) while the equilibrium spreads load at moderate
+    utilization."""
+    base = Scenario(
+        workload=Workload(arrival_rate=2.0, req_bytes=30_000, res_bytes=1_000,
+                          name="inceptionv4"),
+        device=Tier("orin", 0.045),
+        edges=(
+            EdgeSpec(Tier("a2", 0.028)),
+            EdgeSpec(Tier("a100", 0.008)),
+            EdgeSpec(Tier("t4-llm", 0.020, service_model=ServiceModel.EXPONENTIAL)),
+            EdgeSpec(Tier("edge-mixed", 0.015, service_model=ServiceModel.GENERAL,
+                          service_var=0.25 * 0.015**2)),
+        ),
+        network=NetworkPath(20e6 / 8),
+        name="cluster-default-base",
+    )
+    return ClusterSpec(base=base, n_clients=n_clients,
+                       name=f"cluster-{n_clients}x{len(base.edges)}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--cluster", type=Path, default=None,
+                    help="ClusterSpec.to_dict() JSON (default: built-in 64x4)")
+    ap.add_argument("--clients", type=int, default=64,
+                    help="fleet size for the built-in spec (default 64)")
+    ap.add_argument("--duration", type=float, default=180.0,
+                    help="trace duration in seconds (default 180)")
+    ap.add_argument("--epoch-s", type=float, default=1.0,
+                    help="decision epoch length (default 1.0)")
+    ap.add_argument("--bw-drop", type=float, default=0.15,
+                    help="bandwidth multiplier for the middle third of the "
+                         "trace (default 0.15; 1.0 = constant conditions)")
+    ap.add_argument("--stagger", type=int, default=8,
+                    help="decision cohorts (desynchronized control epochs; "
+                         "default 8, 1 = fully synchronous)")
+    ap.add_argument("--hysteresis", type=float, default=0.0,
+                    help="relative-improvement switching threshold (default 0)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-iter", type=int, default=20,
+                    help="equilibrium best-response iteration cap (default 20)")
+    ap.add_argument("--cross-check", action="store_true",
+                    help="validate the equilibrium against the event-driven "
+                         "simulators (slower)")
+    ap.add_argument("--check-n", type=int, default=120_000,
+                    help="simulated jobs per cross-check group (default 120000)")
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write the full report JSON here")
+    args = ap.parse_args(argv)
+
+    if args.cluster is not None:
+        spec = ClusterSpec.from_dict(json.loads(args.cluster.read_text()))
+    else:
+        spec = default_cluster(args.clients)
+    n, e = spec.n_clients, spec.n_edges
+
+    # -- equilibrium under nominal conditions ---------------------------------
+    t0 = time.perf_counter()
+    eq = solve_equilibrium(spec, max_iter=args.max_iter)
+    eq_s = time.perf_counter() - t0
+    print(f"{spec.name}: {n} clients x {e} edges")
+    print(f"equilibrium: {'converged' if eq.converged else 'NOT CONVERGED'} in "
+          f"{eq.iterations} iterations ({eq_s*1e3:.0f} ms"
+          f"{', damped after oscillation' if eq.oscillation else ''})")
+    for tgt, cnt in eq.counts().items():
+        if cnt:
+            print(f"  {tgt:12s} {cnt:4d} clients")
+    print("  edge rho: " + "  ".join(f"{r:.3f}" for r in eq.rho_edges))
+    print(f"  mean latency {eq.mean_latency_s*1e3:.2f} ms")
+
+    # -- closed-loop replay on a bandwidth-step trace --------------------------
+    bw0 = float(np.asarray(spec.base.network.bandwidth_Bps))
+    third = args.duration / 3
+    trace = make_trace(
+        args.duration, args.epoch_s,
+        bandwidth_Bps=lambda t: step_signal(
+            t, [(0, bw0), (third, bw0 * args.bw_drop), (2 * third, bw0)]),
+        arrival_rate=spec.base.workload.arrival_rate,
+    )
+    policies = ("adaptive", "on_device") + tuple(f"edge[{j}]" for j in range(e))
+    res = simulate_cluster(spec, trace, policies=policies, seed=args.seed,
+                           stagger=args.stagger, hysteresis=args.hysteresis)
+    # warm throughput: the scan + scoring are compiled now, time a second pass
+    t0 = time.perf_counter()
+    simulate_cluster(spec, trace, policies=("adaptive",), seed=args.seed,
+                     stagger=args.stagger, hysteresis=args.hysteresis)
+    rate = res.client_epochs / (time.perf_counter() - t0)
+    print(f"closed loop: {res.client_epochs} client-epochs "
+          f"({rate/1e3:.0f}k client-epochs/s warm)")
+    for name, p in res.policies.items():
+        print(f"  {name:12s} mean {p.mean_latency_s*1e3:9.2f} ms  "
+              f"offload {p.offload_frac:5.1%}  saturated {p.saturated_epochs}")
+    print(f"adaptive beats every static: {res.adaptive_wins}")
+
+    report = {
+        "spec": spec.to_dict(),
+        "equilibrium": {
+            "iterations": eq.iterations,
+            "converged": eq.converged,
+            "oscillation": eq.oscillation,
+            "counts": eq.counts(),
+            "rho_edges": eq.rho_edges.tolist(),
+            "mean_latency_s": eq.mean_latency_s,
+            "solve_s": eq_s,
+        },
+        "replay": {
+            "client_epochs": res.client_epochs,
+            "client_epochs_per_sec": rate,
+            "adaptive_wins": res.adaptive_wins,
+            "policies": {
+                name: {
+                    "mean_latency_s": p.mean_latency_s,
+                    "offload_frac": p.offload_frac,
+                    "saturated_epochs": p.saturated_epochs,
+                    "switches": p.switches,
+                }
+                for name, p in res.policies.items()
+            },
+        },
+    }
+
+    rc = 0 if (eq.converged and res.adaptive_wins) else 1
+    if args.cross_check:
+        t0 = time.perf_counter()
+        cc = cross_check_equilibrium(spec, eq, n=args.check_n, seed=args.seed)
+        cc["elapsed_s"] = time.perf_counter() - t0
+        report["cross_check"] = cc
+        print(f"cross-check ({cc['elapsed_s']:.1f} s):")
+        for g in cc["groups"]:
+            print(f"  {g['target']:12s} n={g['n_clients']:3d} rho={g['rho']:.3f} "
+                  f"analytic {g['analytic_s']*1e3:7.2f} ms vs sim "
+                  f"{g['sim_mean_s']*1e3:7.2f} ms -> {g['mape_pct']:.2f}% MAPE")
+        gated_max = cc["gated_max_mape_pct"]
+        print(f"  gated max MAPE {gated_max:.2f}%"
+              if gated_max is not None else "  no gated groups")
+        if gated_max is not None and gated_max > 5.0:
+            rc = 1
+
+    if args.out:
+        args.out.parent.mkdir(parents=True, exist_ok=True)
+        args.out.write_text(json.dumps(report, indent=2))
+        print(f"wrote {args.out}")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

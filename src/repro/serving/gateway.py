@@ -42,6 +42,7 @@ class EdgeHandle:
     bandwidth_Bps: float | None = None  # per-edge path override (else device B)
     arrivals: SlidingRateEstimator = field(default_factory=lambda: SlidingRateEstimator(30.0))
     service: WindowedMoments = field(default_factory=WindowedMoments)
+    load_reports: EwmaEstimator = field(default_factory=lambda: EwmaEstimator(alpha=0.5))
 
     @classmethod
     def from_spec(cls, spec) -> "EdgeHandle":
@@ -62,7 +63,14 @@ class EdgeHandle:
             agg = aggregate_streams(spec.background)
             bg_rate, bg_mean, bg_var = agg.arrival_rate, agg.service_mean_s, agg.service_var
         else:
-            bg_rate, bg_mean, bg_var = 0.0, 0.0, 0.0
+            # no declared tenants: seed the background TEMPLATE with the
+            # edge's own service moments (the fleet bg_template convention),
+            # so a later rate-only load report prices the load like this
+            # workload instead of at zero service time. Inert until a report
+            # arrives — state() ignores the template while the rate is 0.
+            bg_rate = 0.0
+            bg_mean = spec.tier.service_time_s
+            bg_var = implied_service_var(spec.tier)
         return cls(
             name=spec.tier.name,
             service_mean_s=spec.tier.service_time_s,
@@ -73,6 +81,35 @@ class EdgeHandle:
             background_service_var=bg_var,
             bandwidth_Bps=spec.bandwidth_Bps,
         )
+
+    def observe_load(
+        self,
+        background_rate: float,
+        service_mean_s: float | None = None,
+        service_var: float | None = None,
+    ) -> None:
+        """Edge load report (§4.2): EWMA the reported aggregate *other-tenant*
+        rate into this handle's background estimate — the same lagged view the
+        closed-loop cluster simulator's clients act on. The optional moments
+        refresh the background mixture template when the edge reports what the
+        load is made of; without them the current template holds, falling back
+        to this workload's own service moments if the template is degenerate
+        (a hand-built handle with no moments) — reported load must never be
+        priced at zero service time."""
+        if background_rate < 0:
+            raise ValueError("background rate report must be non-negative")
+        if service_mean_s is not None and service_mean_s <= 0:
+            raise ValueError("background service mean report must be positive")
+        if service_var is not None and service_var < 0:
+            raise ValueError("background service variance report must be non-negative")
+        self.background_rate = self.load_reports.update(float(background_rate))
+        if service_mean_s is None and self.background_service_s <= 0.0:
+            self.background_service_s = self.service_mean_s
+            self.background_service_var = self.service_var_s
+        if service_mean_s is not None:
+            self.background_service_s = float(service_mean_s)
+        if service_var is not None:
+            self.background_service_var = float(service_var)
 
     def state(self, wl_service_mean: float | None = None) -> EdgeServerState:
         mine = wl_service_mean if wl_service_mean is not None else self.service_mean_s

@@ -320,6 +320,66 @@ def _multitenant_entry(
     )
 
 
+def _cluster_entry(
+    rng: np.random.Generator,
+    n_clients: int,
+    target_rho: float,
+    *,
+    sim_gate: bool = True,
+    smoke: bool = False,
+) -> CorpusEntry:
+    """Closed-loop regime: a representative client's induced scenario at the
+    solved equilibrium of a small cluster (paper §6).
+
+    The cluster is sized so the fleet's best response concentrates on the
+    fast edge at ~``target_rho`` utilization — a slow device keeps everyone
+    offloading, and the second edge is bad enough that nobody spills — and
+    the representative's view of that fixed point (the other clients as
+    per-stream background) is pinned like any other multitenant entry. The
+    equilibrium solver is deterministic, so regeneration stays byte-identical."""
+    from repro.core.scenario import ClusterSpec
+    from repro.fleet.cluster import induced_scenario, solve_equilibrium
+
+    lam = _jitter(rng, 2.0)
+    s_fast = _jitter(rng, target_rho / (n_clients * lam), 0.05)
+    spec = ClusterSpec(
+        base=Scenario(
+            workload=Workload(arrival_rate=lam, req_bytes=40_000, res_bytes=2_000,
+                              name="corpus"),
+            device=Tier("cpu-slow", 0.400),
+            network=NetworkPath(bandwidth_Bps=_BANDWIDTHS_BPS[2]),
+            edges=(
+                EdgeSpec(_tier("cluster-fast", s_fast, ServiceModel.DETERMINISTIC, 0.0)),
+                EdgeSpec(_tier("cluster-slow", 6.0 * s_fast,
+                               ServiceModel.DETERMINISTIC, 0.0)),
+            ),
+            name=f"cluster-base-rho{target_rho:.2f}",
+        ),
+        n_clients=n_clients,
+        name=f"cluster-{n_clients}c-rho{target_rho:.2f}",
+    )
+    eq = solve_equilibrium(spec)
+    assert eq.converged, "corpus cluster must reach its fixed point"
+    on_edges = eq.choices[eq.choices >= 0]
+    assert on_edges.size, "corpus cluster equilibrium must offload"
+    j = int(np.argmax(np.bincount(on_edges, minlength=spec.n_edges)))
+    rep = int(np.nonzero(eq.choices == j)[0][0])
+    scn = induced_scenario(
+        spec, eq.choices, rep,
+        name=f"cluster-{n_clients}c-rho{target_rho:.2f}",
+    )
+    strategy = f"edge[{j}]"
+    rho = bottleneck_rho(scn, strategy)
+    return CorpusEntry(
+        scenario=scn,
+        strategy=strategy,
+        regime="cluster-equilibrium",
+        rho=rho,
+        sim_gate=sim_gate and rho <= 0.9,
+        smoke=smoke,
+    )
+
+
 def generate_corpus(seed: int = DEFAULT_SEED) -> tuple[CorpusEntry, ...]:
     """The golden corpus: deterministic in ``seed``, spanning tiers x
     bandwidth x arrival rate x tenancy x service-model mix x utilization
@@ -371,6 +431,11 @@ def generate_corpus(seed: int = DEFAULT_SEED) -> tuple[CorpusEntry, ...]:
     # quantified but never gated
     entries.append(_multitenant_entry(rng, 0.45, 2, hetero=True))
     entries.append(_multitenant_entry(rng, 0.75, 3, hetero=True))
+
+    # -- closed-loop cluster equilibria (§6): a representative client's view
+    # of the solved fixed point, gated like any multitenant entry ------------
+    entries.append(_cluster_entry(rng, 8, 0.55))
+    entries.append(_cluster_entry(rng, 8, 0.82))
 
     names = [e.name for e in entries]
     assert len(names) == len(set(names)), "corpus entry names must be unique"

@@ -1,0 +1,181 @@
+"""The bench-regression gate itself: a synthetic slowdown must exit nonzero,
+tolerance math must hold in both directions, missing metrics are loud, and
+``benchmarks.run --only`` rejects unknown families."""
+
+import copy
+import json
+
+import pytest
+
+from benchmarks.check_regression import (
+    DEFAULT_TOLERANCE,
+    HEADLINES,
+    compare,
+    main as check_main,
+    resolve,
+    update_baselines,
+)
+from benchmarks.run import BENCHES, main as run_main
+
+BASE_CLUSTER = {
+    "closed_loop": {
+        "client_epochs_per_sec": 4.0e5,
+        "adaptive_mean_latency_s": 0.041,
+    },
+    "equilibrium": {"iterations": 5},
+}
+
+
+def _write(d, name, doc):
+    (d / name).write_text(json.dumps(doc))
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    fresh = tmp_path / "fresh"
+    base = tmp_path / "base"
+    fresh.mkdir()
+    base.mkdir()
+    return fresh, base
+
+
+class TestCheckRegression:
+    def test_synthetic_2x_slowdown_exits_nonzero(self, dirs, capsys):
+        """Acceptance criterion: the tolerance check is demonstrably wired —
+        a 2x throughput drop fails the gate (machine-matched mode, where
+        wall-clock baselines are comparable)."""
+        fresh, base = dirs
+        _write(base, "BENCH_cluster.json", BASE_CLUSTER)
+        slow = copy.deepcopy(BASE_CLUSTER)
+        slow["closed_loop"]["client_epochs_per_sec"] /= 2.0
+        _write(fresh, "BENCH_cluster.json", slow)
+        rc = check_main(["--fresh", str(fresh), "--baselines", str(base),
+                         "--machine-matched"])
+        assert rc != 0
+        out = capsys.readouterr().out
+        assert "REGRESSED" in out
+        assert "client_epochs_per_sec" in out
+
+    def test_machine_bound_metrics_informational_on_foreign_machines(self, dirs):
+        """Without --machine-matched a slower machine must not fail the gate
+        on absolute throughputs — but the row still shows up as info."""
+        fresh, base = dirs
+        _write(base, "BENCH_cluster.json", BASE_CLUSTER)
+        slow = copy.deepcopy(BASE_CLUSTER)
+        slow["closed_loop"]["client_epochs_per_sec"] /= 3.0  # slow CI runner
+        _write(fresh, "BENCH_cluster.json", slow)
+        rows, regressions = compare(fresh, base)
+        assert regressions == 0
+        tp = next(r for r in rows
+                  if r["metric"] == "closed_loop.client_epochs_per_sec")
+        assert tp["status"] == "info(slower)"
+        # a MODEL regression on the same slow machine still fails
+        slow["equilibrium"]["iterations"] = 15
+        _write(fresh, "BENCH_cluster.json", slow)
+        _rows, regressions = compare(fresh, base)
+        assert regressions == 1
+
+    def test_within_tolerance_passes(self, dirs):
+        fresh, base = dirs
+        _write(base, "BENCH_cluster.json", BASE_CLUSTER)
+        near = copy.deepcopy(BASE_CLUSTER)
+        near["closed_loop"]["client_epochs_per_sec"] *= 0.8  # -20% < 45% tol
+        near["equilibrium"]["iterations"] = 6  # +20% < 30% tol
+        _write(fresh, "BENCH_cluster.json", near)
+        rc = check_main(["--fresh", str(fresh), "--baselines", str(base),
+                         "--machine-matched"])
+        assert rc == 0
+
+    def test_missing_baseline_file_is_loud(self, dirs):
+        """A family produced fresh but absent from the committed baselines is
+        MISSING for every headline — never a silent skip."""
+        fresh, base = dirs
+        _write(fresh, "BENCH_cluster.json", BASE_CLUSTER)
+        rows, regressions = compare(fresh, base)
+        assert regressions == len(HEADLINES["BENCH_cluster.json"])
+        assert all(r["status"] == "MISSING" for r in rows)
+
+    def test_missing_fresh_file_is_loud(self, dirs):
+        """The symmetric hole: a baselined family whose fresh artifact never
+        got produced (renamed file, family dropped from the CI --only list)
+        must fail, not shrink the gate silently."""
+        fresh, base = dirs
+        _write(base, "BENCH_cluster.json", BASE_CLUSTER)
+        rows, regressions = compare(fresh, base)
+        assert regressions == len(HEADLINES["BENCH_cluster.json"])
+        assert all(r["status"] == "MISSING" and r["fresh"] is None for r in rows)
+
+    def test_lower_is_better_direction(self, dirs):
+        fresh, base = dirs
+        _write(base, "BENCH_cluster.json", BASE_CLUSTER)
+        worse = copy.deepcopy(BASE_CLUSTER)
+        worse["equilibrium"]["iterations"] = 12  # 2.4x the baseline
+        _write(fresh, "BENCH_cluster.json", worse)
+        rows, regressions = compare(fresh, base)
+        bad = [r for r in rows if r["status"] == "REGRESSED"]
+        assert regressions == 1
+        assert bad[0]["metric"] == "equilibrium.iterations"
+
+    def test_improvement_never_fails(self, dirs):
+        fresh, base = dirs
+        _write(base, "BENCH_cluster.json", BASE_CLUSTER)
+        better = copy.deepcopy(BASE_CLUSTER)
+        better["closed_loop"]["client_epochs_per_sec"] *= 10.0
+        better["equilibrium"]["iterations"] = 2
+        _write(fresh, "BENCH_cluster.json", better)
+        _rows, regressions = compare(fresh, base)
+        assert regressions == 0
+
+    def test_missing_metric_is_a_regression(self, dirs):
+        fresh, base = dirs
+        _write(base, "BENCH_cluster.json", BASE_CLUSTER)
+        shrunk = copy.deepcopy(BASE_CLUSTER)
+        del shrunk["equilibrium"]
+        _write(fresh, "BENCH_cluster.json", shrunk)
+        rows, regressions = compare(fresh, base)
+        assert regressions >= 1
+        assert any(r["status"] == "MISSING" for r in rows)
+
+    def test_nothing_compared_is_an_error(self, dirs):
+        fresh, base = dirs  # both empty
+        rc = check_main(["--fresh", str(fresh), "--baselines", str(base)])
+        assert rc == 2
+
+    def test_update_baselines_copies_known_families(self, dirs):
+        fresh, base = dirs
+        _write(fresh, "BENCH_cluster.json", BASE_CLUSTER)
+        _write(fresh, "UNRELATED.json", {"x": 1})
+        copied = update_baselines(fresh, base)
+        assert copied == ["BENCH_cluster.json"]
+        assert json.loads((base / "BENCH_cluster.json").read_text()) == BASE_CLUSTER
+        assert not (base / "UNRELATED.json").exists()
+
+    def test_headline_registry_resolves_against_committed_baselines(self):
+        """Every headline metric must exist in the committed baselines —
+        otherwise the gate silently shrinks as artifacts evolve."""
+        from benchmarks.check_regression import default_baseline_dir
+
+        base_dir = default_baseline_dir()
+        for fname, metrics in HEADLINES.items():
+            doc = json.loads((base_dir / fname).read_text())
+            for metric in metrics:
+                assert resolve(doc, metric) is not None, (fname, metric)
+
+    def test_default_tolerance_is_thirty_percent(self):
+        assert DEFAULT_TOLERANCE == pytest.approx(0.30)
+
+
+class TestRunOnlyValidation:
+    def test_unknown_family_exits_nonzero_listing_known(self, capsys, tmp_path):
+        rc = run_main(["--only", "definitely-not-a-family",
+                       "--out", str(tmp_path)])
+        assert rc != 0
+        err = capsys.readouterr().err
+        for family in BENCHES:
+            assert family in err
+        assert "definitely-not-a-family" in err
+
+    def test_known_families_accepted_mixed_with_unknown_still_fail(self, capsys, tmp_path):
+        rc = run_main(["--only", "fleet", "--only", "nope", "--out", str(tmp_path)])
+        assert rc != 0  # nothing ran: the registry check precedes execution
+        assert "nope" in capsys.readouterr().err

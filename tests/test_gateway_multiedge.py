@@ -1,0 +1,150 @@
+"""OffloadGateway/EdgeHandle multi-edge selection: the deployable gateway and
+the closed-loop cluster decision path must agree on identical inputs, and a
+fully saturated pool degrades to on-device instead of raising."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    EdgeSpec,
+    NetworkPath,
+    Scenario,
+    ServiceModel,
+    Tier,
+    Workload,
+)
+from repro.core.manager import ON_DEVICE
+from repro.core.scenario import implied_service_var
+from repro.fleet import predict_decisions
+from repro.serving.gateway import EdgeHandle, OffloadGateway
+
+
+def _scn(**kw) -> Scenario:
+    defaults = dict(
+        workload=Workload(2.0, 30_000, 1_000, name="inceptionv4"),
+        device=Tier("orin", 0.045),
+        edges=(
+            EdgeSpec(Tier("a2", 0.028)),
+            EdgeSpec(Tier("a100", 0.008)),
+            EdgeSpec(Tier("t4", 0.020, service_model=ServiceModel.EXPONENTIAL)),
+        ),
+        network=NetworkPath(20e6 / 8),
+    )
+    defaults.update(kw)
+    return Scenario(**defaults)
+
+
+def _report_cluster_loads(gw: OffloadGateway, scn: Scenario, endo) -> None:
+    """Feed the gateway the same per-edge view the cluster decision path
+    uses: the edge reports its full aggregate (other clients + a stream
+    statistically identical to ours already counted in), with the
+    homogeneous-cluster mixture template."""
+    lam = scn.workload.arrival_rate
+    for j, h in enumerate(gw.edges):
+        tier = scn.edges[j].tier
+        h.observe_load(endo[j] + lam, tier.service_time_s,
+                       implied_service_var(tier))
+
+
+class TestMultiEdgeSelection:
+    @pytest.mark.parametrize("endo", [
+        (0.0, 0.0, 0.0),       # empty pool: fastest edge wins
+        (0.0, 80.0, 0.0),      # crowd on a100: next-best edge wins
+        (20.0, 80.0, 30.0),    # load everywhere: argmin over loaded forms
+        (30.0, 100.0, 40.0),   # heavy but stable: may fall back on-device
+    ])
+    def test_gateway_picks_the_cluster_edge(self, endo):
+        scn = _scn()
+        spec = ClusterSpec(base=scn, n_clients=1, name="gw-coherence")
+        choice, t_dev, t_edge = predict_decisions(
+            spec, [scn.workload.arrival_rate],
+            [float(np.asarray(scn.network.bandwidth_Bps))],
+            [list(endo)], [0.0, 0.0, 0.0])
+
+        gw = OffloadGateway.from_scenario(scn)
+        _report_cluster_loads(gw, scn, endo)
+        # no arrivals observed -> the gateway falls back to the spec rate,
+        # matching the cluster's lam_hat above
+        d = gw.decide(now=1.0)
+        assert d.edge_index == choice[0], (endo, d.t_edges, t_edge)
+        assert d.t_dev == pytest.approx(float(t_dev[0]), rel=1e-9)
+        for j in range(len(scn.edges)):
+            assert d.t_edges[j] == pytest.approx(float(t_edge[0, j]), rel=1e-9)
+
+    def test_rate_only_report_prices_load_at_own_service_moments(self):
+        """A load report WITHOUT moments must still price the reported rate
+        with this workload's service moments (the bg_template convention),
+        never at zero service time — an 80 rps report makes a 125 rps edge
+        visibly busy."""
+        scn = _scn()
+        spec = ClusterSpec(base=scn, n_clients=1, name="rate-only")
+        endo = (0.0, 80.0, 0.0)
+        gw = OffloadGateway.from_scenario(scn)
+        lam = scn.workload.arrival_rate
+        for j, h in enumerate(gw.edges):
+            h.observe_load(endo[j] + lam)  # rate only, no moments
+        d = gw.decide(now=1.0)
+        choice, _t_dev, t_edge = predict_decisions(
+            spec, [lam], [float(np.asarray(scn.network.bandwidth_Bps))],
+            [list(endo)], [0.0, 0.0, 0.0])
+        assert d.edge_index == choice[0]
+        for j in range(len(scn.edges)):
+            assert d.t_edges[j] == pytest.approx(float(t_edge[0, j]), rel=1e-9)
+
+    def test_all_edges_saturated_degrades_to_on_device(self):
+        """rho >= 1 on every edge: the gateway must place on-device, not
+        raise — saturation is a routine operating point of a shared pool."""
+        scn = _scn()
+        gw = OffloadGateway.from_scenario(scn)
+        # aggregate rates beyond every edge's k*mu AND the return NIC
+        _report_cluster_loads(gw, scn, (60.0, 140.0, 80.0))
+        d = gw.decide(now=1.0)
+        assert d.edge_index == ON_DEVICE
+        assert d.strategy == "on_device"
+        assert np.isfinite(d.t_dev)
+        assert all(not np.isfinite(t) for t in d.t_edges)
+        # and it keeps serving epochs without accumulating errors
+        for epoch in range(2, 5):
+            assert gw.decide(now=float(epoch)).edge_index == ON_DEVICE
+
+
+class TestEdgeHandleLoadReports:
+    def test_observe_load_ewma_and_template_refresh(self):
+        h = EdgeHandle(name="e", service_mean_s=0.02)
+        h.observe_load(10.0, 0.02, 0.0)
+        assert h.background_rate == pytest.approx(10.0)  # first report is raw
+        h.observe_load(20.0)
+        assert h.background_rate == pytest.approx(15.0)  # alpha = 0.5 EWMA
+        assert h.background_service_s == pytest.approx(0.02)  # template kept
+        h.observe_load(15.0, 0.03, 1e-4)
+        assert h.background_service_s == pytest.approx(0.03)
+        assert h.background_service_var == pytest.approx(1e-4)
+
+    def test_negative_report_rejected(self):
+        h = EdgeHandle(name="e", service_mean_s=0.02)
+        with pytest.raises(ValueError):
+            h.observe_load(-1.0)
+
+    def test_degenerate_moment_reports_rejected(self):
+        # a zero/negative mean would price reported load at zero service time
+        h = EdgeHandle(name="e", service_mean_s=0.02)
+        with pytest.raises(ValueError):
+            h.observe_load(5.0, service_mean_s=0.0)
+        with pytest.raises(ValueError):
+            h.observe_load(5.0, service_var=-1e-3)
+        assert h.background_rate == 0.0  # nothing was recorded
+
+    def test_hand_built_handle_rate_only_report_uses_own_moments(self):
+        h = EdgeHandle(name="e", service_mean_s=0.02, service_var_s=4e-4)
+        h.observe_load(5.0)
+        assert h.background_service_s == pytest.approx(0.02)
+        assert h.background_service_var == pytest.approx(4e-4)
+
+    def test_state_reflects_reported_background(self):
+        scn = _scn()
+        h = EdgeHandle.from_spec(scn.edges[0])
+        h.observe_load(12.0, 0.028, 0.0)
+        st = h.state()
+        assert st.arrival_rate == pytest.approx(12.0)
+        assert st.service_time_s == pytest.approx(h.service_mean_s)
