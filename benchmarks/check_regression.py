@@ -57,6 +57,11 @@ HEADLINES: dict[str, dict[str, tuple[str, float | None, bool]]] = {
     "BENCH_validate.json": {
         "smoke_gate_mean_mape_pct": ("lower", None, False),
     },
+    "BENCH_tail.json": {
+        "vec_euler_rows_per_sec": ("higher", 0.45, True),
+        "asym_vs_euler_p99_mean_gap_pct": ("lower", None, False),
+        "station_pass_speedup": ("higher", None, False),
+    },
     "BENCH_paper_figures.json": {
         "fig2_mape_pct": ("lower", None, False),
         "fig3_mape_pct": ("lower", None, False),

@@ -9,6 +9,8 @@ JSON artifact under ``--out``:
   * ``cluster``       -> BENCH_cluster.json (closed-loop client-epochs/s +
                          equilibrium iterations)
   * ``validate``      -> BENCH_validate.json (fidelity-gate cost + headline MAPE)
+  * ``tail``          -> BENCH_tail.json (sojourn-quantile throughput +
+                         asymptote-vs-Euler gap + station_pass speedup)
   * ``kernels``       -> CSV rows only (interpret-mode correctness latency)
   * ``roofline``      -> CSV rows from dry-run artifacts, when present
 
@@ -74,6 +76,12 @@ def run_validate(out_dir: Path) -> dict:
     return validate_rows(out_dir)
 
 
+def run_tail(out_dir: Path) -> dict:
+    from .tail_bench import tail_rows
+
+    return tail_rows(out_dir)
+
+
 def run_roofline(out_dir: Path) -> dict:
     # roofline table from dry-run artifacts, if present
     roof = Path("experiments/roofline")
@@ -90,6 +98,7 @@ BENCHES = {
     "fleet": run_fleet,
     "cluster": run_cluster,
     "validate": run_validate,
+    "tail": run_tail,
     "roofline": run_roofline,
 }
 

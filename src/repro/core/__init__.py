@@ -46,9 +46,21 @@ from .scenario import (
     ScenarioError,
     ScenarioPrediction,
     analytic,
+    analytic_tail,
     crossovers,
     parse_strategy,
     simulate,
+    tail_stations,
+)
+from .tail import (
+    Station,
+    mixture_station,
+    mm1_sojourn_quantile,
+    nic_station,
+    proc_station,
+    sojourn_cdf,
+    sojourn_mean,
+    sojourn_quantile,
 )
 from .queueing import (
     QueueStats,

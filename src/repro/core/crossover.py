@@ -23,6 +23,7 @@ from .multitenant import TenantStream, multitenant_edge_latency
 __all__ = [
     "Crossover",
     "solve_crossover",
+    "smallest_true",
     "bandwidth_crossover",
     "arrival_rate_crossovers",
     "tenancy_crossover",
@@ -68,10 +69,16 @@ def solve_crossover(
     else:
         xs = np.linspace(lo, hi, samples)
     vals = [diff(float(x)) for x in xs]
-    finite = [(x, v) for x, v in zip(xs, vals) if math.isfinite(v)]
-    if len(finite) < 2:
-        return Crossover(None, None, lo, hi)
-    for (x0, v0), (x1, v1) in zip(finite, finite[1:]):
+    # Sign changes are only trusted between grid-ADJACENT finite samples.
+    # Filtering non-finite samples first and pairing the survivors used to
+    # pair points on opposite sides of an instability pocket (a run of
+    # inf/NaN between them): a sign flip across the pocket sent _bisect into
+    # the non-finite region and reported a bogus "crossover" at a stability
+    # boundary. A pocket now yields no pair, exactly like the vectorized
+    # fleet_crossover scan.
+    for (x0, v0), (x1, v1) in zip(zip(xs, vals), zip(xs[1:], vals[1:])):
+        if not (math.isfinite(v0) and math.isfinite(v1)):
+            continue
         if v0 == 0.0:
             return Crossover(float(x0), v1 < 0, lo, hi)
         if (v0 > 0) != (v1 > 0):
@@ -140,6 +147,37 @@ def arrival_rate_crossovers(
     return out
 
 
+def smallest_true(predicate: Callable[[int], bool], max_n: int) -> int | None:
+    """Smallest m in [1, max_n] with ``predicate(m)`` True, assuming the
+    predicate is monotone (False ... False True ... True).
+
+    Exponential bracketing then integer bisection: O(log max_n) evaluations
+    instead of a linear scan — the difference between ~20 and ~1024 closed-
+    form evaluations per tenancy query. Returns None when the predicate is
+    False everywhere in range.
+    """
+    if max_n < 1:
+        return None
+    if predicate(1):
+        return 1
+    lo = 1  # highest index known False
+    hi = 1
+    while hi < max_n:
+        hi = min(hi * 2, max_n)
+        if predicate(hi):
+            break
+        lo = hi
+    else:
+        return None
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if predicate(mid):
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
 def tenancy_crossover(
     wl: Workload,
     dev: Tier,
@@ -152,16 +190,19 @@ def tenancy_crossover(
     """Smallest number of co-located tenants m at which on-device wins (Fig. 5c).
 
     Tenants are homogeneous copies of ``tenant_template`` (the paper's §4.8
-    setup: m InceptionV4 apps at 2 RPS each). Returns None if offloading wins
-    even at ``max_tenants`` or never wins at m=1.
+    setup: m InceptionV4 apps at 2 RPS each), so T_edge(m) is monotone
+    increasing in m (more load on a fixed mixture; ``inf`` past saturation)
+    and the scan is a bracket-and-bisect on the tenant count — pinned equal
+    to the old linear scan by tests. Returns None if offloading wins even at
+    ``max_tenants``.
     """
     td = float(on_device_latency(wl, dev))
-    for m in range(1, max_tenants + 1):
+
+    def on_device_wins(m: int) -> bool:
         streams: Sequence[TenantStream] = [tenant_template] * m
-        te = float(multitenant_edge_latency(wl, edge, net, streams))
-        if te > td:
-            return m
-    return None
+        return float(multitenant_edge_latency(wl, edge, net, streams)) > td
+
+    return smallest_true(on_device_wins, max_tenants)
 
 
 def service_gap_bound(kind: str, wl: Workload, dev: Tier, edge: Tier, net: NetworkPath, **kw):

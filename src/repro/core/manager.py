@@ -9,12 +9,18 @@ comments refer to Algorithm 1 in the paper.
 Beyond-paper (flag-gated, default off, recorded in EXPERIMENTS.md):
   * hysteresis — require a relative improvement before switching strategy, to
     damp flapping around a crossover;
-  * deadline tail-awareness — optimise a mean + z * sigma proxy instead of the
-    mean when a latency SLO is supplied.
+  * SLO-quantile decisions — when ``slo_quantile`` is set, every strategy is
+    scored by the q-quantile of its closed-form sojourn *distribution*
+    (:mod:`repro.core.tail`) instead of its mean, so the argmin optimises the
+    latency SLO directly (p95/p99) rather than a mean proxy;
+  * ``tail_z`` — the DEPRECATED predecessor of the quantile mode: inflate
+    both waits by ``(1 + z)`` as a crude variability penalty. Kept as a
+    fallback; prefer ``slo_quantile``.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Mapping, Sequence
 
@@ -22,11 +28,21 @@ import numpy as np
 
 from .latency import (
     NetworkPath,
+    ServiceModel,
     Tier,
     Workload,
     mg1_wait,
     mm1_wait,
     proc_wait,
+)
+from .tail import (
+    KIND_DET,
+    KIND_EXP,
+    KIND_GAMMA,
+    Station,
+    offload_stations,
+    proc_station,
+    sojourn_quantile,
 )
 from .telemetry import TelemetrySnapshot
 
@@ -107,19 +123,43 @@ class Decision:
 class AdaptiveOffloadManager:
     """Algorithm 1, plus optional hysteresis / tail-awareness extensions."""
 
+    _MODEL_KINDS = {
+        ServiceModel.DETERMINISTIC: KIND_DET,
+        ServiceModel.EXPONENTIAL: KIND_EXP,
+        ServiceModel.GENERAL: KIND_GAMMA,
+    }
+
     def __init__(
         self,
         device: Tier,
         *,
         hysteresis: float = 0.0,
         tail_z: float = 0.0,
+        slo_quantile: float | None = None,
+        tail_method: str = "euler",
         return_results: bool = True,
     ):
         if hysteresis < 0:
             raise ValueError("hysteresis must be >= 0")
+        if slo_quantile is not None and not 0.0 < slo_quantile < 1.0:
+            raise ValueError(f"slo_quantile must be in (0, 1), got {slo_quantile}")
+        if tail_method not in ("euler", "asymptote"):
+            raise ValueError(f"unknown tail_method {tail_method!r}")
+        if tail_z > 0.0:
+            if slo_quantile is not None:
+                raise ValueError("tail_z and slo_quantile are mutually exclusive; "
+                                 "use slo_quantile")
+            warnings.warn(
+                "tail_z is deprecated: it inflates the mean by a fixed factor "
+                "instead of optimising a quantile; use slo_quantile=0.99 (the "
+                "principled SLO mode backed by repro.core.tail)",
+                DeprecationWarning, stacklevel=2,
+            )
         self.device = device
         self.hysteresis = hysteresis
         self.tail_z = tail_z
+        self.slo_quantile = slo_quantile
+        self.tail_method = tail_method
         # paper §3.3: results consumed at the edge omit the return network
         # delay — must match the Scenario/analytic() setting or the argmin
         # disagrees with the closed forms on the same spec
@@ -129,11 +169,24 @@ class AdaptiveOffloadManager:
         self.history: list[Decision] = []
 
     # -- Algorithm 1 lines 1-2 ------------------------------------------------
+    def _device_station(self, lam_dev: float) -> Station:
+        d = self.device
+        return proc_station(lam_dev, self._MODEL_KINDS[d.service_model],
+                            d.service_time_s, d.service_var, d.parallelism_k)
+
     def _predict_device(self, lam_dev: float) -> float:
+        if self.slo_quantile is not None:
+            return float(sojourn_quantile((self._device_station(lam_dev),),
+                                          self.slo_quantile, method=self.tail_method))
         # proc_wait dispatches on the device's service model (M/D/1, M/M/1,
         # or M/G/1 with its variance) exactly as the paper's lines 1-2 do —
         # duplicating that dispatch here is how GENERAL was once mis-modeled
-        return float(proc_wait(self.device, lam_dev) + self.device.service_time_s)
+        w = float(proc_wait(self.device, lam_dev))
+        if self.tail_z > 0.0:
+            # deprecated fallback — the SAME variability inflation the edge
+            # path gets, so equal-variability specs are treated symmetrically
+            w = w * (1.0 + self.tail_z)
+        return w + self.device.service_time_s
 
     # -- Algorithm 1 lines 3-6 ------------------------------------------------
     def _predict_edge(
@@ -150,6 +203,19 @@ class AdaptiveOffloadManager:
             # measured bandwidth can hit 0 during an outage: the link is
             # saturated/dead, so offloading is never preferable this epoch
             return float(np.inf)
+        if self.slo_quantile is not None:
+            # SLO mode: score the q-quantile of the composed sojourn
+            # distribution over the same three stations lines 3-6 price by
+            # their means. The edge wait is the aggregate-mixture M/G/1
+            # (gamma-matched), line 6's own service time rides on top.
+            k_mu = edge.parallelism_k * edge.service_rate
+            proc = Station(edge.arrival_rate, KIND_GAMMA, 1.0 / k_mu,
+                           edge.service_var, KIND_GAMMA, edge.service_time_s,
+                           edge.service_var)
+            stations = offload_stations(lam_dev, wl.req_bytes, wl.res_bytes, b,
+                                        proc, return_results=self.return_results)
+            return float(sojourn_quantile(stations, self.slo_quantile,
+                                          method=self.tail_method))
         # zero-byte payloads mean "no transfer on this leg" (e.g. results
         # consumed at the edge) — the NIC queue degenerates to zero delay
         if wl.req_bytes > 0:

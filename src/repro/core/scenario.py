@@ -34,6 +34,7 @@ from .crossover import (
     Crossover,
     arrival_rate_crossovers,
     bandwidth_crossover,
+    smallest_true,
     solve_crossover,
 )
 from .latency import (
@@ -47,6 +48,13 @@ from .latency import (
 )
 from .manager import AdaptiveOffloadManager, EdgeServerState
 from .multitenant import AggregateLoad, TenantStream, aggregate_streams, multitenant_edge_latency
+from .tail import (
+    Station,
+    mixture_station,
+    offload_stations,
+    proc_station,
+    sojourn_quantile,
+)
 from .telemetry import TelemetrySnapshot
 
 __all__ = [
@@ -56,11 +64,22 @@ __all__ = [
     "ClusterSpec",
     "ScenarioPrediction",
     "analytic",
+    "analytic_tail",
+    "tail_stations",
+    "tier_station",
     "simulate",
     "crossovers",
     "implied_service_var",
     "parse_strategy",
 ]
+
+# ServiceModel -> repro.core.tail kind code (identical numbering to
+# repro.fleet.batch.MODEL_CODES, asserted in tests)
+_TAIL_KINDS = {
+    ServiceModel.DETERMINISTIC: 0,
+    ServiceModel.EXPONENTIAL: 1,
+    ServiceModel.GENERAL: 2,
+}
 
 
 def implied_service_var(tier: Tier) -> float:
@@ -464,6 +483,9 @@ class Scenario:
     def analytic(self) -> "ScenarioPrediction":
         return analytic(self)
 
+    def analytic_tail(self, q: float, *, method: str = "euler") -> dict[str, float]:
+        return analytic_tail(self, q, method=method)
+
     def simulate(self, strategy: str | None = None, **kwargs) -> S.SimResult:
         return simulate(self, strategy, **kwargs)
 
@@ -671,6 +693,59 @@ def analytic(scn: Scenario) -> ScenarioPrediction:
 
 
 # ---------------------------------------------------------------------------
+# analytic_tail(scn, q): closed-form sojourn quantiles per strategy
+# ---------------------------------------------------------------------------
+
+
+def tier_station(tier: Tier, lam: float) -> Station:
+    """A :mod:`repro.core.tail` processing station for ``tier`` under arrival
+    rate ``lam`` — the service-model dispatch (M/D/1 / M/M/1 / M/G/1 on the
+    paper's k*mu aggregation) in distributional form."""
+    return proc_station(lam, _TAIL_KINDS[tier.service_model],
+                        tier.service_time_s, tier.service_var, tier.parallelism_k)
+
+
+def tail_stations(scn: Scenario, strategy: str | None = None) -> tuple[Station, ...]:
+    """The Fig. 1 tandem of ``strategy``'s path as :mod:`repro.core.tail`
+    stations: on-device is the single processing queue; ``edge[j]`` is device
+    NIC -> edge proc (own model, or the §3.4 gamma-matched mixture when the
+    edge hosts background tenants) -> return NIC. The mean of the composed
+    distribution equals :func:`analytic`'s total on the same path, so tails
+    and means can never disagree about the operating point."""
+    strategy, j = _resolve_strategy(scn, strategy)
+    wl = scn.workload
+    if j < 0:
+        return (tier_station(scn.device, wl.arrival_rate),)
+    e = scn.edges[j]
+    b = float(np.asarray(scn.network_for(e).bandwidth_Bps))
+    if e.background:
+        agg = e.aggregate(wl)
+        proc = mixture_station(agg.arrival_rate, agg.service_mean_s,
+                               agg.service_var, e.tier.parallelism_k)
+    else:
+        proc = tier_station(e.tier, wl.arrival_rate)
+    return offload_stations(wl.arrival_rate, wl.req_bytes, wl.res_bytes, b,
+                            proc, return_results=scn.return_results)
+
+
+def analytic_tail(scn: Scenario, q: float, *, method: str = "euler") -> dict[str, float]:
+    """The q-quantile (q in (0, 1)) of the end-to-end latency distribution
+    per strategy — keys match :meth:`ScenarioPrediction.totals`.
+
+    ``method="euler"`` inverts the Pollaczek-Khinchine transform numerically
+    (accuracy-first default); ``method="asymptote"`` uses the cheap
+    dominant-singularity exponential tail that the jitted fleet/cluster paths
+    vectorise. Unstable strategies report ``inf``, like the mean forms.
+    """
+    out = {"on_device": sojourn_quantile(tail_stations(scn, "on_device"), q,
+                                         method=method)}
+    for i in range(len(scn.edges)):
+        out[f"edge[{i}]"] = sojourn_quantile(tail_stations(scn, f"edge[{i}]"), q,
+                                             method=method)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # simulate(scn): the same spec through the discrete-event testbed
 # ---------------------------------------------------------------------------
 
@@ -797,7 +872,15 @@ def simulate(
 # ---------------------------------------------------------------------------
 
 
-def crossovers(scn: Scenario, axis: str, *, edge: int = 0, **kwargs) -> Crossover:
+def crossovers(
+    scn: Scenario,
+    axis: str,
+    *,
+    edge: int = 0,
+    quantile: float | None = None,
+    tail_method: str = "euler",
+    **kwargs,
+) -> Crossover:
     """Where does the preferred strategy flip along ``axis``?
 
     ``axis``: ``"bandwidth"`` (Fig. 4), ``"arrival_rate"`` (Fig. 5b; first
@@ -807,6 +890,13 @@ def crossovers(scn: Scenario, axis: str, *, edge: int = 0, **kwargs) -> Crossove
     there stay the kernel layer. Edges with background tenants are compared
     via the multi-tenant (M/G/1) latency, so the answer always agrees with
     ``analytic`` on the same spec.
+
+    ``quantile`` switches the comparison from expected latencies to the
+    q-quantile of the full sojourn distributions (:mod:`repro.core.tail`) —
+    the SLO view. Percentile crossovers are a result class the paper's mean
+    forms cannot express: because offload paths stack three queues, their
+    tails are heavier than the single on-device queue's, so p99 crossovers
+    systematically shift toward on-device relative to mean crossovers.
     """
     _require(bool(scn.edges), "edges", "crossover queries need at least one edge")
     _require(0 <= edge < len(scn.edges), "edges", f"edge index {edge} out of range")
@@ -818,6 +908,109 @@ def crossovers(scn: Scenario, axis: str, *, edge: int = 0, **kwargs) -> Crossove
         te = float(np.asarray(multitenant_edge_latency(
             wl_at, e.tier, net, streams, return_results=scn.return_results)))
         return te - float(np.asarray(on_device_latency(wl_at, dev)))
+
+    def first_on_device_wins(te_of_m, td: float, template: TenantStream,
+                             max_tenants: int) -> int | None:
+        """Smallest m (own stream + (m-1) template copies) with te(m) > td.
+
+        Homogeneous templates — service moments equal to the own stream's,
+        the paper's §4.8 setup and the default — make te(m) monotone in m
+        (fixed mixture moments, growing load), so the search is
+        ``smallest_true``'s exponential bracket + integer bisection. A
+        heterogeneous template can dip first (the mixture mean shifts toward
+        the template), so it keeps the exhaustive first-hit scan.
+        """
+        own = e.own_stream(wl)
+        homogeneous = (template.service_mean_s == own.service_mean_s
+                       and template.service_var == own.service_var)
+        if homogeneous:
+            return smallest_true(lambda m: te_of_m(m) > td, max_tenants)
+        for m in range(1, max_tenants + 1):
+            if te_of_m(m) > td:
+                return m
+        return None
+
+    def dev_tail(wl_at: Workload) -> float:
+        return sojourn_quantile((tier_station(dev, wl_at.arrival_rate),),
+                                quantile, method=tail_method)
+
+    def edge_tail(wl_at: Workload, b: float) -> float:
+        """T_edge_q at the given operating point — the same stations
+        ``tail_stations`` composes, with workload/bandwidth swapped in
+        (bandwidth sweeps override any per-edge path, exactly like the mean
+        solvers)."""
+        if e.background:
+            agg = aggregate_streams((e.own_stream(wl_at),) + e.background)
+            proc = mixture_station(agg.arrival_rate, agg.service_mean_s,
+                                   agg.service_var, e.tier.parallelism_k)
+        else:
+            proc = tier_station(e.tier, wl_at.arrival_rate)
+        return sojourn_quantile(
+            offload_stations(wl_at.arrival_rate, wl_at.req_bytes,
+                             wl_at.res_bytes, b, proc,
+                             return_results=scn.return_results),
+            quantile, method=tail_method)
+
+    if quantile is not None:
+        net = scn.network_for(e)
+        b0 = float(np.asarray(net.bandwidth_Bps))
+        if axis == "bandwidth":
+            lo = kwargs.pop("lo_Bps", 1e4)
+            hi = kwargs.pop("hi_Bps", 1e9)
+            td_fixed = dev_tail(wl)  # bandwidth-independent: one inversion
+
+            def diff_b(b: float) -> float:
+                return edge_tail(wl, b) - td_fixed
+
+            return solve_crossover(diff_b, lo, hi, **kwargs)
+        if axis == "arrival_rate":
+            lo = kwargs.pop("lo", 0.01)
+            caps = [dev.parallelism_k / dev.service_time_s, b0 / wl.req_bytes]
+            if not e.background:
+                caps.append(e.tier.parallelism_k / e.tier.service_time_s)
+                if scn.return_results and wl.res_bytes > 0:
+                    caps.append(b0 / wl.res_bytes)
+            hi = kwargs.pop("hi", None) or 0.999 * min(caps)
+            if hi <= lo:
+                return Crossover(None, None, lo, hi)
+
+            def diff_lam(lam: float) -> float:
+                wl_at = replace(wl, arrival_rate=lam)
+                return edge_tail(wl_at, b0) - dev_tail(wl_at)
+
+            return solve_crossover(diff_lam, lo, hi, **kwargs)
+        if axis == "tenancy":
+            max_tenants = kwargs.pop("max_tenants", 1024)
+            template = kwargs.pop("tenant_template", None) or (
+                e.background[0] if e.background else e.own_stream(wl)
+            )
+            if kwargs:
+                raise TypeError(
+                    f"unexpected keyword arguments for tenancy axis: {sorted(kwargs)}"
+                )
+            td = sojourn_quantile(tail_stations(scn, "on_device"), quantile,
+                                  method=tail_method)
+
+            def te_quantile(m: int) -> float:
+                agg = aggregate_streams(
+                    (e.own_stream(wl),) + (template,) * (m - 1))
+                proc = mixture_station(agg.arrival_rate, agg.service_mean_s,
+                                       agg.service_var, e.tier.parallelism_k)
+                return sojourn_quantile(
+                    offload_stations(wl.arrival_rate, wl.req_bytes,
+                                     wl.res_bytes, b0, proc,
+                                     return_results=scn.return_results),
+                    quantile, method=tail_method)
+
+            m_star = first_on_device_wins(te_quantile, td, template, max_tenants)
+            return Crossover(
+                value=None if m_star is None else float(m_star),
+                offload_wins_above=None if m_star is None else False,
+                lo=1.0, hi=float(max_tenants),
+            )
+        raise ScenarioError(
+            "axis", f"unknown axis {axis!r} (known: bandwidth, arrival_rate, tenancy)"
+        )
 
     if axis == "bandwidth":
         if e.background:
@@ -866,14 +1059,13 @@ def crossovers(scn: Scenario, axis: str, *, edge: int = 0, **kwargs) -> Crossove
         # answer agrees with analytic() on the corresponding spec.
         net = scn.network_for(e)
         td = float(np.asarray(on_device_latency(wl, dev)))
-        m_star = None
-        for m in range(1, max_tenants + 1):
+
+        def te_mean(m: int) -> float:
             streams = (e.own_stream(wl),) + (template,) * (m - 1)
-            te = float(np.asarray(multitenant_edge_latency(
+            return float(np.asarray(multitenant_edge_latency(
                 wl, e.tier, net, streams, return_results=scn.return_results)))
-            if te > td:
-                m_star = m
-                break
+
+        m_star = first_on_device_wins(te_mean, td, template, max_tenants)
         return Crossover(
             value=None if m_star is None else float(m_star),
             offload_wins_above=None if m_star is None else False,

@@ -122,7 +122,20 @@ class Mixture(ServiceDist):
     weights: tuple[float, ...]
 
     def __post_init__(self):
+        if not self.components:
+            raise ValueError("Mixture needs at least one component")
+        if len(self.weights) != len(self.components):
+            raise ValueError(
+                f"Mixture has {len(self.components)} components but "
+                f"{len(self.weights)} weights")
+        if not all(np.isfinite(w) and w >= 0 for w in self.weights):
+            # a negative/NaN/inf weight would "normalize" into nonsense
+            # sampling probabilities (or blow up inside rng.choice later)
+            raise ValueError(
+                f"Mixture weights must be finite and >= 0, got {self.weights}")
         total = sum(self.weights)
+        if total <= 0:
+            raise ValueError("Mixture weights must sum to a positive value")
         if not np.isclose(total, 1.0):
             object.__setattr__(self, "weights", tuple(w / total for w in self.weights))
 
@@ -157,22 +170,46 @@ def poisson_arrivals(lam: float, n: int, rng: np.random.Generator) -> np.ndarray
     return np.cumsum(rng.exponential(1.0 / lam, size=n))
 
 
+def _station_pass_k1_loop(arrivals: np.ndarray, services: np.ndarray) -> np.ndarray:
+    """The textbook sequential Lindley recursion — kept as the reference
+    oracle the vectorized k=1 path is tested against."""
+    n = len(arrivals)
+    dep = np.empty(n, dtype=np.float64)
+    prev = -np.inf
+    for i in range(n):
+        start = arrivals[i] if arrivals[i] > prev else prev
+        prev = start + services[i]
+        dep[i] = prev
+    return dep
+
+
 def station_pass(arrivals: np.ndarray, services: np.ndarray, k: int = 1) -> np.ndarray:
     """FCFS k-server station: departure times for jobs arriving at ``arrivals``.
 
     Jobs start in arrival order on the earliest-free server (FCFS), so
     start_i = max(arrival_i, min(server_free)). Exact Lindley-style recursion;
     k=1 reduces to departure_i = max(arrival_i, departure_{i-1}) + service_i.
+
+    The k=1 recursion unrolls exactly: with C_i = sum_{j<=i} S_j,
+
+        dep_i = C_i + max_{j <= i} (arr_j - C_{j-1})
+
+    (each job departs at the busy-period start that dominates it plus the
+    accumulated service since), so the hot path is a cumsum + running max
+    instead of a Python loop — ~100x faster at the simulator's 100k-job runs.
+    Agrees with the sequential recursion to float64 roundoff (the two sum the
+    same services in different association orders; tested at <=1e-12 relative
+    on the departure times).
     """
     n = len(arrivals)
     if k == 1:
-        dep = np.empty(n, dtype=np.float64)
-        prev = -np.inf
-        for i in range(n):
-            start = arrivals[i] if arrivals[i] > prev else prev
-            prev = start + services[i]
-            dep[i] = prev
-        return dep
+        if n == 0:  # the sequential recursion returned an empty array too
+            return np.empty(0, dtype=np.float64)
+        csum = np.cumsum(services, dtype=np.float64)
+        excl = np.empty(n, dtype=np.float64)
+        excl[0] = 0.0
+        excl[1:] = csum[:-1]
+        return csum + np.maximum.accumulate(arrivals - excl)
     free = [0.0] * k
     heapq.heapify(free)
     dep = np.empty(n, dtype=np.float64)

@@ -9,6 +9,8 @@ and for operating points that *move*:
     and batched-bisection crossover solving over a whole batch;
   * :func:`simulate_fleet` / :func:`lindley_station` — batched
     Lindley-recursion tandem-queue simulation as one `lax.scan` launch;
+  * :func:`fleet_tail` — batched sojourn-time q-quantiles (the SLO view of
+    the same closed forms, via :mod:`repro.core.tail`'s transform layer);
   * :mod:`traces` + :func:`replay` — §5-style dynamic conditions scored
     against adaptive vs static offloading policies via the same
     ``AdaptiveOffloadManager.step()`` hook the serving gateway uses;
@@ -40,6 +42,7 @@ from .cluster import (
 from .policy import bg_template, clamp_saturation, parse_policy, true_latency
 from .replay import PolicyResult, ReplayResult, replay
 from .sim_vec import FleetSimResult, lindley_station, simulate_fleet
+from .tail_vec import FleetTailPrediction, fleet_tail
 from .traces import (
     Trace,
     TraceBatch,

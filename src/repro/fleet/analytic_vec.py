@@ -267,8 +267,11 @@ def _fleet_crossover_jit(
         lambda x: _diff_at(c, x, axis_code, edge), in_axes=1, out_axes=1
     )(xs)
 
-    # scan for the first sign change between CONSECUTIVE FINITE samples
-    # (inf gaps are skipped, exactly like solve_crossover's filtered pairs)
+    # scan for the first sign change between grid-ADJACENT finite samples.
+    # A non-finite sample resets the pairing: pairing across an instability
+    # pocket (a run of inf between opposite-sign finite regions) would send
+    # the bisection into the non-finite region and report a bogus crossover
+    # at a stability boundary — the same fix as solve_crossover's scan.
     b = lo.shape[0]
 
     def scan_step(carry, col):
@@ -283,8 +286,8 @@ def _fleet_crossover_jit(
         bflo = jnp.where(new, last_v, bflo)
         wins = jnp.where(new, v_i < 0, wins)
         found = found | hit
-        last_x = jnp.where(fin, x_i, last_x)
-        last_v = jnp.where(fin, v_i, last_v)
+        last_x = x_i
+        last_v = jnp.where(fin, v_i, jnp.nan)  # non-finite breaks adjacency
         return (last_x, last_v, found, blo, bhi, bflo, wins), None
 
     init = (

@@ -52,6 +52,7 @@ from repro.core.scenario import (
     implied_service_var,
 )
 from repro.core.simulation import steady_slice
+from repro.core.tail import resolve_tail_method
 
 from .analytic_vec import (
     _device_latency_vec,
@@ -64,6 +65,14 @@ from .analytic_vec import (
 from .batch import MODEL_CODES, ScenarioBatch
 from .policy import bg_template, clamp_saturation, parse_policy
 from .sim_vec import simulate_fleet
+from .tail_vec import (
+    KIND_EXP,
+    KIND_GAMMA,
+    _device_tail_vec,
+    _edge_tail_vec,
+    _stack_stations,
+    sojourn_quantile_vec,
+)
 from .traces import Trace, TraceBatch
 
 __all__ = [
@@ -170,6 +179,55 @@ def _predict_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum):
     return t_dev, t_edge
 
 
+def _predict_tail_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum, q,
+                      method: str):
+    """The q-quantile twin of :func:`_predict_vec`: the same station
+    composition an SLO-mode ``AdaptiveOffloadManager`` prices scalar-side
+    (device NIC -> aggregate-mixture M/G/1 wait + OWN service -> return NIC),
+    vectorized over (N, E). Coherence with ``manager.decide`` under
+    ``slo_quantile`` is pinned by tests exactly like the mean path."""
+    n = lam_hat.shape[0]
+    e_n = cst["edge_s"].shape[0]
+    dev_kind = jnp.broadcast_to(cst["dev_model"], (n,)).astype(jnp.int8)
+    t_dev = sojourn_quantile_vec(_stack_stations({
+        "lam": lam_hat,
+        "wkind": dev_kind,
+        "wmean": jnp.broadcast_to(cst["dev_s"] / cst["dev_k"], (n,)),
+        "wvar": jnp.broadcast_to(cst["dev_var"], (n,)),
+        "fkind": dev_kind,
+        "fmean": jnp.broadcast_to(cst["dev_s"], (n,)),
+        "fvar": jnp.broadcast_to(cst["dev_var"], (n,)),
+    }), q, method=method)
+
+    own_var = _implied_var_vec(cst["edge_model"], cst["edge_s"], cst["edge_var"])
+    lam = lam_hat[:, None]
+    lam_tot = lam + bg_lam
+    mean_mix = (lam * cst["edge_s"] + bg_wsum) / lam_tot
+    second = (lam * (own_var + cst["edge_s"] ** 2) + bg_ssum) / lam_tot
+    var_mix = jnp.maximum(0.0, second - mean_mix**2)
+
+    b = jnp.where(jnp.isnan(cst["edge_bw"]), bw_hat[:, None], cst["edge_bw"])
+    req_mean = cst["req_bytes"] / b
+    use_res = cst["return_results"] & (cst["res_bytes"] > 0)
+    res_mean = jnp.where(use_res, cst["res_bytes"] / b, 0.0)
+    shape = (n, e_n)
+    kexp = jnp.full(shape, KIND_EXP, dtype=jnp.int8)
+    kgam = jnp.full(shape, KIND_GAMMA, dtype=jnp.int8)
+    zero = jnp.zeros(shape)
+    lam_e = jnp.broadcast_to(lam, shape)
+    stations = _stack_stations(
+        {"lam": lam_e, "wkind": kexp, "wmean": req_mean, "wvar": zero,
+         "fkind": kexp, "fmean": req_mean, "fvar": zero},
+        {"lam": lam_tot, "wkind": kgam, "wmean": mean_mix / cst["edge_k"],
+         "wvar": var_mix, "fkind": kgam,
+         "fmean": jnp.broadcast_to(cst["edge_s"], shape), "fvar": var_mix},
+        {"lam": lam_tot, "wkind": kexp, "wmean": res_mean, "wvar": zero,
+         "fkind": kexp, "fmean": res_mean, "fvar": zero},
+    )
+    t_edge = sojourn_quantile_vec(stations, q, method=method)
+    return t_dev, t_edge
+
+
 def _decide_vec(t_dev, t_edge, prev_choice, hysteresis, use_hysteresis):
     """Vectorized ``manager.apply_decision_rule``: first-argmin with
     on-device winning ties, plus the relative-improvement hysteresis."""
@@ -196,6 +254,8 @@ def predict_decisions(
     *,
     prev_choice=None,
     hysteresis: float = 0.0,
+    slo_quantile: float | None = None,
+    tail_method: str = "asymptote",
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """One epoch of cluster decisions from explicit estimates.
 
@@ -207,6 +267,10 @@ def predict_decisions(
     multi-edge coherence tests assert. Non-positive arrival estimates fall
     back to the client's spec rate, exactly like the closed-loop scan (an
     idle estimator must not poison the mixture mean with 0/0)."""
+    if slo_quantile is not None:
+        if not 0.0 < slo_quantile < 1.0:
+            raise ValueError(f"slo_quantile must be in (0, 1), got {slo_quantile}")
+        tail_method = resolve_tail_method(slo_quantile, tail_method)
     cst = _spec_arrays(spec)
     with jax.experimental.enable_x64():
         c = _as_jnp(cst)
@@ -222,7 +286,12 @@ def predict_decisions(
             lam_hat.shape[0], spec.n_edges)
         exo = jnp.asarray(exo_hat, dtype=jnp.float64).reshape(spec.n_edges)
         bg_lam, bg_wsum, bg_ssum = _bg_moments(c, endo, exo[None, :])
-        t_dev, t_edge = _predict_vec(c, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum)
+        if slo_quantile is None:
+            t_dev, t_edge = _predict_vec(c, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum)
+        else:
+            t_dev, t_edge = _predict_tail_vec(
+                c, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum,
+                jnp.float64(slo_quantile), tail_method)
         if prev_choice is None:
             prev = jnp.full(lam_hat.shape, ON_DEVICE, dtype=jnp.int32)
             use_h = jnp.bool_(False)
@@ -238,9 +307,10 @@ def predict_decisions(
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("window", "stagger"))
+@partial(jax.jit, static_argnames=("window", "stagger", "slo_q", "tail_method"))
 def _closed_loop_scan(cst, bw_true, lam_true, exo_true, *, window: int,
-                      stagger: int, dt, bw_alpha, bg_alpha, hysteresis, seed):
+                      stagger: int, dt, bw_alpha, bg_alpha, hysteresis, seed,
+                      slo_q: float | None = None, tail_method: str = "asymptote"):
     """Decisions/estimates/loads of the adaptive policy over all T epochs.
 
     Carry: per-client EWMA bandwidth, the sliding-window ring of per-epoch
@@ -277,9 +347,15 @@ def _closed_loop_scan(cst, bw_true, lam_true, exo_true, *, window: int,
         rate = counts.sum(axis=1) / (window * dt)
         lam_hat = jnp.where(rate > 0, rate, cst["lam_spec"])
 
-        # -- Algorithm 1 on the estimated state ----------------------------
+        # -- Algorithm 1 on the estimated state (mean or SLO-quantile) -----
         bg_lam, bg_wsum, bg_ssum = _bg_moments(cst, est_endo, est_exo[None, :])
-        t_dev, t_edge = _predict_vec(cst, lam_hat, est_bw, bg_lam, bg_wsum, bg_ssum)
+        if slo_q is None:
+            t_dev, t_edge = _predict_vec(cst, lam_hat, est_bw,
+                                         bg_lam, bg_wsum, bg_ssum)
+        else:
+            t_dev, t_edge = _predict_tail_vec(
+                cst, lam_hat, est_bw, bg_lam, bg_wsum, bg_ssum,
+                jnp.float64(slo_q), tail_method)
         # hysteresis compares against a PREVIOUS decision, which exists once
         # every cohort has decided at least once
         decided = _decide_vec(t_dev, t_edge, prev_choice, hysteresis, idx >= stagger)
@@ -314,13 +390,10 @@ def _closed_loop_scan(cst, bw_true, lam_true, exo_true, *, window: int,
 # ---------------------------------------------------------------------------
 
 
-@jax.jit
-def _latency_tables_jit(cst, lam_true, bw_true, exo_true, choices):
-    """(T, N) t_dev and (T, N, E) t_edge under the TRUE conditions.
-
-    ``t_edge[t, i, e]`` is client i's end-to-end latency if its stream joins
-    edge e this epoch, given everyone ELSE's realized choice — the (T*N, E)
-    batched ``_edge_latency_vec`` call with the endogenous aggregate minus
+def _truth_batch(cst, lam_true, bw_true, exo_true, choices):
+    """The (T*N)-row ScenarioBatch-style column dict of every client-epoch
+    under the TRUE conditions — the single construction both the mean and the
+    SLO-quantile scoring tables consume, with the endogenous aggregate minus
     the client's own contribution at its chosen edge as background."""
     t_n, n = lam_true.shape
     e_n = exo_true.shape[1]
@@ -351,18 +424,47 @@ def _latency_tables_jit(cst, lam_true, bw_true, exo_true, choices):
         "bg_wsum": bg_wsum.reshape(b, e_n),
         "bg_ssum": bg_ssum.reshape(b, e_n),
     }
+    return c, endo_total
+
+
+@jax.jit
+def _latency_tables_jit(cst, lam_true, bw_true, exo_true, choices):
+    """(T, N) t_dev and (T, N, E) t_edge expected latency under the TRUE
+    conditions — one batched ``_edge_latency_vec`` call over T*N rows."""
+    t_n, n = lam_true.shape
+    e_n = exo_true.shape[1]
+    c, endo_total = _truth_batch(cst, lam_true, bw_true, exo_true, choices)
     t_dev = _device_latency_vec(c).reshape(t_n, n)
     t_edge = _edge_latency_vec(c).reshape(t_n, n, e_n)
     return t_dev, t_edge, endo_total
 
 
+@partial(jax.jit, static_argnames=("tail_method",))
+def _latency_tables_tail_jit(cst, lam_true, bw_true, exo_true, choices, q,
+                             *, tail_method: str):
+    """The q-quantile twin of :func:`_latency_tables_jit` (analytic
+    semantics: mixture mean as s_edge, exactly like ``_edge_tail_vec``)."""
+    t_n, n = lam_true.shape
+    e_n = exo_true.shape[1]
+    c, endo_total = _truth_batch(cst, lam_true, bw_true, exo_true, choices)
+    t_dev = _device_tail_vec(c, q, tail_method).reshape(t_n, n)
+    t_edge = _edge_tail_vec(c, q, tail_method).reshape(t_n, n, e_n)
+    return t_dev, t_edge, endo_total
+
+
 def _score_assignment(
-    cst_j, lam_true, bw_true, exo_true, choices
+    cst_j, lam_true, bw_true, exo_true, choices,
+    slo_quantile: float | None = None, tail_method: str = "asymptote",
 ) -> tuple[np.ndarray, np.ndarray]:
-    """True-condition latency of every (epoch, client) under ``choices``."""
-    t_dev, t_edge, endo_total = _latency_tables_jit(
-        cst_j, jnp.asarray(lam_true), jnp.asarray(bw_true),
-        jnp.asarray(exo_true), jnp.asarray(choices, dtype=jnp.int32))
+    """True-condition latency (mean, or the q-quantile when ``slo_quantile``
+    is set) of every (epoch, client) under ``choices``."""
+    args = (cst_j, jnp.asarray(lam_true), jnp.asarray(bw_true),
+            jnp.asarray(exo_true), jnp.asarray(choices, dtype=jnp.int32))
+    if slo_quantile is None:
+        t_dev, t_edge, endo_total = _latency_tables_jit(*args)
+    else:
+        t_dev, t_edge, endo_total = _latency_tables_tail_jit(
+            *args, jnp.float64(slo_quantile), tail_method=tail_method)
     stacked = jnp.concatenate([t_dev[:, :, None], t_edge], axis=2)
     idx = (jnp.asarray(choices, dtype=jnp.int32) + 1)[..., None]
     lat = jnp.take_along_axis(stacked, idx, axis=2)[..., 0]
@@ -439,8 +541,16 @@ def simulate_cluster(
     saturation_penalty_s: float = 30.0,
     hysteresis: float = 0.0,
     stagger: int = 1,
+    slo_quantile: float | None = None,
+    tail_method: str = "asymptote",
 ) -> ClusterResult:
     """Drive N clients through the trace batch with the loop closed.
+
+    ``slo_quantile`` switches decisions AND true-condition scoring from
+    expected latencies to the q-quantile of each path's closed-form sojourn
+    distribution (:mod:`repro.fleet.tail_vec`, ``tail_method="asymptote"`` by
+    default — the cheap dominant-singularity form that vectorises inside the
+    ``lax.scan``).
 
     The adaptive policy runs the vectorized Algorithm-1 path per client per
     epoch inside one ``lax.scan`` (decisions feed the loads the estimators
@@ -464,6 +574,10 @@ def simulate_cluster(
         raise ValueError("rate_window_epochs must be >= 1")
     if not 1 <= stagger <= spec.n_clients:
         raise ValueError(f"stagger must be in [1, n_clients], got {stagger}")
+    if slo_quantile is not None and not 0.0 < slo_quantile < 1.0:
+        raise ValueError(f"slo_quantile must be in (0, 1), got {slo_quantile}")
+    if slo_quantile is not None:
+        tail_method = resolve_tail_method(slo_quantile, tail_method)
 
     cst = _spec_arrays(spec)
     t_n, e_n = traces.n_epochs, spec.n_edges
@@ -494,18 +608,22 @@ def simulate_cluster(
                 bg_alpha=jnp.float64(bg_alpha),
                 hysteresis=jnp.float64(hysteresis),
                 seed=seed,
+                slo_q=slo_quantile,
+                tail_method=tail_method,
             )
             choices = np.asarray(choice)
             est_bw, est_lam = np.asarray(bw_e), np.asarray(lam_e)
             est_endo, est_exo = np.asarray(endo_e), np.asarray(exo_e)
-            lat, loads = _score_assignment(cst_j, lam_j, bw_j, exo_j, choices)
+            lat, loads = _score_assignment(cst_j, lam_j, bw_j, exo_j, choices,
+                                           slo_quantile, tail_method)
             lat, saturated = clamp_saturation(lat, saturation_penalty_s)
             results["adaptive"] = ClusterPolicyResult(
                 "adaptive", lat, choices, loads, saturated)
 
         for name, tgt in static_targets.items():
             choices = np.full((t_n, spec.n_clients), tgt, dtype=np.int32)
-            lat, loads = _score_assignment(cst_j, lam_j, bw_j, exo_j, choices)
+            lat, loads = _score_assignment(cst_j, lam_j, bw_j, exo_j, choices,
+                                           slo_quantile, tail_method)
             lat, saturated = clamp_saturation(lat, saturation_penalty_s)
             results[name] = ClusterPolicyResult(name, lat, choices, loads, saturated)
 
@@ -558,10 +676,15 @@ class Equilibrium:
         return out
 
 
-def _equilibrium_tables(cst_j, lam, bw, exo, choices):
-    t_dev, t_edge, endo = _latency_tables_jit(
-        cst_j, jnp.asarray(lam[None, :]), jnp.asarray(bw[None, :]),
-        jnp.asarray(exo[None, :]), jnp.asarray(choices[None, :], dtype=jnp.int32))
+def _equilibrium_tables(cst_j, lam, bw, exo, choices,
+                        slo_quantile=None, tail_method="asymptote"):
+    args = (cst_j, jnp.asarray(lam[None, :]), jnp.asarray(bw[None, :]),
+            jnp.asarray(exo[None, :]), jnp.asarray(choices[None, :], dtype=jnp.int32))
+    if slo_quantile is None:
+        t_dev, t_edge, endo = _latency_tables_jit(*args)
+    else:
+        t_dev, t_edge, endo = _latency_tables_tail_jit(
+            *args, jnp.float64(slo_quantile), tail_method=tail_method)
     return np.asarray(t_dev)[0], np.asarray(t_edge)[0], np.asarray(endo)[0]
 
 
@@ -572,8 +695,14 @@ def solve_equilibrium(
     arrival_rates: np.ndarray | None = None,
     exo_rates: np.ndarray | None = None,
     max_iter: int = 20,
+    slo_quantile: float | None = None,
+    tail_method: str = "asymptote",
 ) -> Equilibrium:
     """Iterate decisions -> loads to a fixed point under constant conditions.
+
+    With ``slo_quantile`` set, clients best-respond on q-quantiles instead of
+    means (an SLO-aware congestion game) and ``latency_s`` reports the
+    per-client quantile at the fixed point.
 
     Clients best-respond synchronously with perfect information (the true
     closed forms, no estimator lag). When the decision vector revisits a
@@ -585,6 +714,10 @@ def solve_equilibrium(
     the lowest edge index). Each damped move strictly lowers the mover's
     latency given the others, so the dynamics descend a congestion potential
     instead of oscillating; a sweep with no moves is the fixed point."""
+    if slo_quantile is not None and not 0.0 < slo_quantile < 1.0:
+        raise ValueError(f"slo_quantile must be in (0, 1), got {slo_quantile}")
+    if slo_quantile is not None:
+        tail_method = resolve_tail_method(slo_quantile, tail_method)
     n, e_n = spec.n_clients, spec.n_edges
     cst = _spec_arrays(spec)
     lam = np.asarray(arrival_rates, dtype=np.float64) if arrival_rates is not None \
@@ -609,7 +742,8 @@ def solve_equilibrium(
         iterations = 0
 
         def tables(ch):
-            t_dev, t_edge, _ = _equilibrium_tables(cst_j, lam, bw, exo, ch)
+            t_dev, t_edge, _ = _equilibrium_tables(cst_j, lam, bw, exo, ch,
+                                                   slo_quantile, tail_method)
             return np.concatenate([t_dev[:, None], t_edge], axis=1)
 
         stacked = tables(choices)

@@ -26,7 +26,14 @@ import numpy as np
 from repro.core.latency import NetworkPath, edge_offload_latency, on_device_latency
 from repro.core.manager import ON_DEVICE
 from repro.core.multitenant import TenantStream, aggregate_streams, multitenant_edge_latency
-from repro.core.scenario import Scenario, ScenarioError, implied_service_var, parse_strategy
+from repro.core.scenario import (
+    Scenario,
+    ScenarioError,
+    implied_service_var,
+    parse_strategy,
+    tier_station,
+)
+from repro.core.tail import mixture_station, offload_stations, sojourn_quantile
 
 __all__ = ["parse_policy", "bg_template", "true_latency", "clamp_saturation"]
 
@@ -58,9 +65,20 @@ def bg_template(scn: Scenario, j: int) -> tuple[float, float, float]:
 def true_latency(
     scn: Scenario, target: int, bw: float, lam: float, bg_rates: np.ndarray,
     templates: Sequence[tuple[float, float, float]],
+    *,
+    slo_quantile: float | None = None,
+    tail_method: str = "euler",
 ) -> float:
-    """Closed-form latency of ``target`` under the true epoch conditions."""
+    """Closed-form latency of ``target`` under the true epoch conditions.
+
+    With ``slo_quantile`` set, the score is the q-quantile of the path's
+    sojourn distribution (:mod:`repro.core.tail`) instead of the mean — the
+    same objective an SLO-mode manager optimises, so adaptive-vs-static
+    comparisons stay apples to apples under an SLO."""
     wl = replace(scn.workload, arrival_rate=float(lam))
+    if slo_quantile is not None:
+        return _true_tail_latency(scn, target, bw, wl, bg_rates, templates,
+                                  slo_quantile, tail_method)
     if target == ON_DEVICE:
         return float(np.asarray(on_device_latency(wl, scn.device)))
     e = scn.edges[target]
@@ -73,6 +91,31 @@ def true_latency(
             wl, e.tier, net, streams, return_results=scn.return_results)))
     return float(np.asarray(edge_offload_latency(
         wl, e.tier, net, return_results=scn.return_results)))
+
+
+def _true_tail_latency(
+    scn: Scenario, target: int, bw: float, wl, bg_rates, templates,
+    q: float, method: str,
+) -> float:
+    """The q-quantile twin of the mean scoring above: identical station
+    composition to ``scenario.tail_stations`` with the trace-churned
+    background re-aggregated at the reported rate."""
+    if target == ON_DEVICE:
+        return float(sojourn_quantile((tier_station(scn.device, wl.arrival_rate),),
+                                      q, method=method))
+    e = scn.edges[target]
+    b = float(bw if e.bandwidth_Bps is None else e.bandwidth_Bps)
+    rate = float(bg_rates[target])
+    _, mean, var = templates[target]
+    if rate > 0:
+        agg = aggregate_streams((e.own_stream(wl), TenantStream(rate, mean, var)))
+        proc = mixture_station(agg.arrival_rate, agg.service_mean_s,
+                               agg.service_var, e.tier.parallelism_k)
+    else:
+        proc = tier_station(e.tier, wl.arrival_rate)
+    stations = offload_stations(wl.arrival_rate, wl.req_bytes, wl.res_bytes,
+                                b, proc, return_results=scn.return_results)
+    return float(sojourn_quantile(stations, q, method=method))
 
 
 def clamp_saturation(latencies: np.ndarray, penalty_s: float) -> tuple[np.ndarray, int]:

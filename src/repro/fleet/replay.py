@@ -87,6 +87,8 @@ def replay(
     rate_window_epochs: int = 5,
     saturation_penalty_s: float = 30.0,
     manager: AdaptiveOffloadManager | None = None,
+    slo_quantile: float | None = None,
+    tail_method: str = "euler",
 ) -> ReplayResult:
     """Drive ``scn`` through ``trace``, scoring adaptive vs static policies.
 
@@ -96,6 +98,12 @@ def replay(
     so the manager reacts with realistic estimator lag, exactly as the
     gateway would. ``manager`` defaults to ``scn.manager()`` (pass one with
     hysteresis etc. to study the beyond-paper extensions).
+
+    ``slo_quantile`` switches the whole replay to the SLO view: the default
+    manager decides on q-quantiles (``scn.manager(slo_quantile=...)``) and
+    every policy is scored by the q-quantile of its chosen path under the
+    true conditions, so ``adaptive_wins`` answers the §5 question for tail
+    latency instead of the mean.
     """
     if trace.n_edges not in (0, len(scn.edges)):
         raise ScenarioError(
@@ -112,7 +120,12 @@ def replay(
     spec_bg = np.array([t[0] for t in templates])
 
     rng = np.random.default_rng(seed)
-    mgr = manager if manager is not None else scn.manager()
+    if manager is not None:
+        mgr = manager
+    elif slo_quantile is not None:
+        mgr = scn.manager(slo_quantile=slo_quantile, tail_method=tail_method)
+    else:
+        mgr = scn.manager()
     dt = trace.epoch_s
     bw_est = EwmaEstimator(alpha=bw_alpha)
     lam_est = SlidingRateEstimator(window_s=rate_window_epochs * dt)
@@ -171,7 +184,9 @@ def replay(
         for i, tgt in enumerate(targets):
             bg_true = trace.edge_bg_rate[i] if trace.n_edges else spec_bg
             lats[i] = true_latency(scn, tgt, float(trace.bandwidth_Bps[i]),
-                                   float(trace.arrival_rate[i]), bg_true, templates)
+                                   float(trace.arrival_rate[i]), bg_true, templates,
+                                   slo_quantile=slo_quantile,
+                                   tail_method=tail_method)
         lats, saturated = clamp_saturation(lats, saturation_penalty_s)
         results[name] = PolicyResult(
             name=name, latencies_s=lats, targets=tuple(targets),

@@ -24,6 +24,8 @@ from pathlib import Path
 from repro.validate import (
     DEFAULT_MAPE_BUDGET_PCT,
     DEFAULT_SEED,
+    DEFAULT_TAIL_BUDGET_PCT,
+    DEFAULT_TAIL_PCT,
     default_fixture_path,
     generate_corpus,
     load_corpus,
@@ -54,6 +56,18 @@ def _print_report(rep, elapsed_s: float) -> None:
               f"over {gate['n']} scenarios (budget {gate['budget_pct']:.1f}%, "
               f"max {gate['max_pct']:.2f}%, {gate['within_5_frac']:.0%} within ±5%) "
               f"-> {'PASS' if gate['passed'] else 'FAIL'}")
+    tvec = d["scalar_vs_vec_tail"]
+    print(f"  scalar vs vectorized tail:     max rel err {tvec['max_rel_err']:.2e} "
+          f"(tol {tvec['tol']:.0e}) -> {'PASS' if tvec['passed'] else 'FAIL'}")
+    tg = d["tail_gate"]
+    if tg["n"] == 0:
+        print(f"  analytic p{tg['tail_pct']:.0f} vs simulated:     not exercised "
+              "(no tail-gated entries)")
+    else:
+        print(f"  analytic p{tg['tail_pct']:.0f} vs simulated:     mean MAPE "
+              f"{tg['mean_pct']:.2f}% over {tg['n']} scenarios "
+              f"(budget {tg['budget_pct']:.1f}%, max {tg['max_pct']:.2f}%) "
+              f"-> {'PASS' if tg['passed'] else 'FAIL'}")
     print("  per-band MAPE (all simulated entries):")
     for band, s in d["bands"].items():
         print(f"    {band:8s} n={s['n']:2d} mean {s['mean_pct']:6.2f}%  "
@@ -87,6 +101,10 @@ def main(argv=None) -> int:
                     help="cap on the near-saturation n multiplier (default 6; 2 with --smoke)")
     ap.add_argument("--budget", type=float, default=DEFAULT_MAPE_BUDGET_PCT,
                     help="MAPE gate budget in percent (default 5.0)")
+    ap.add_argument("--tail-pct", type=float, default=DEFAULT_TAIL_PCT,
+                    help="latency percentile for the tail gate (default 99)")
+    ap.add_argument("--tail-budget", type=float, default=DEFAULT_TAIL_BUDGET_PCT,
+                    help="tail-percentile gate budget in percent (default 10.0)")
     ap.add_argument("--bootstrap", type=int, default=200,
                     help="bootstrap replicates per simulated mean")
     ap.add_argument("--no-sim", action="store_true",
@@ -121,6 +139,8 @@ def main(argv=None) -> int:
         bootstrap=args.bootstrap,
         simulate=not args.no_sim,
         sim_cross_count=2 if args.smoke else 3,
+        tail_pct=args.tail_pct,
+        tail_budget_pct=args.tail_budget,
     )
     elapsed = time.perf_counter() - t0
 

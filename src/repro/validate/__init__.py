@@ -27,11 +27,14 @@ from .corpus import (
 from .differential import (
     DEFAULT_GOLDEN_TOL,
     DEFAULT_MAPE_BUDGET_PCT,
+    DEFAULT_TAIL_BUDGET_PCT,
+    DEFAULT_TAIL_PCT,
     DEFAULT_VEC_TOL,
     EntryReport,
     ValidationReport,
     run_differential,
     smoke_subset,
+    tail_gated,
 )
 from .metrics import (
     BootstrapCI,

@@ -437,6 +437,19 @@ def generate_corpus(seed: int = DEFAULT_SEED) -> tuple[CorpusEntry, ...]:
     entries.append(_cluster_entry(rng, 8, 0.55))
     entries.append(_cluster_entry(rng, 8, 0.82))
 
+    # -- tail-percentile regime: entries whose job is exercising the sojourn-
+    # QUANTILE layer (analytic p99 vs simulated percentile(99)). Appended
+    # last so every earlier entry's rng draws — and therefore the whole
+    # pinned fixture prefix — stay byte-identical across regenerations.
+    # Exact-transform service models only (det/exp); the gamma-vs-lognormal
+    # GENERAL approximation is quantified through the ordinary regimes.
+    entries.append(_device_entry(rng, _DEVICE_TIERS[2], 0.6,
+                                 regime="tail-percentile", smoke=True))
+    entries.append(_device_entry(rng, _DEVICE_TIERS[0], 0.7,
+                                 regime="tail-percentile"))
+    entries.append(_offload_entry(rng, _EDGE_TIERS[2], 0.6, bound="compute",
+                                  regime="tail-percentile"))
+
     names = [e.name for e in entries]
     assert len(names) == len(set(names)), "corpus entry names must be unique"
     return tuple(entries)

@@ -1,0 +1,591 @@
+"""Tail-latency layer (ISSUE 5): closed-form sojourn quantiles, the
+vectorized twin, SLO-aware decisions, and the decision/crossover correctness
+satellites (tail_z symmetry, instability-pocket crossovers, vectorized
+station_pass, Mixture validation, tenancy bracketing)."""
+
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import simulation as S
+from repro.core import tail as T
+from repro.core.crossover import (
+    Crossover,
+    smallest_true,
+    solve_crossover,
+    tenancy_crossover,
+)
+from repro.core.latency import NetworkPath, ServiceModel, Tier, Workload
+from repro.core.manager import ON_DEVICE, AdaptiveOffloadManager, EdgeServerState
+from repro.core.multitenant import TenantStream, multitenant_edge_latency
+from repro.core.scenario import EdgeSpec, Scenario, analytic_tail, tail_stations
+from repro.core.simulation import Mixture, _station_pass_k1_loop, station_pass
+from repro.core.telemetry import TelemetrySnapshot
+from repro.fleet import ScenarioBatch, fleet_tail
+
+
+def _mm1_station(lam, mu):
+    return T.proc_station(lam, T.KIND_EXP, 1.0 / mu, 0.0, 1.0)
+
+
+SCN = Scenario(
+    workload=Workload(8.0, 50_000, 4_000),
+    device=Tier("dev", 0.05, service_model=ServiceModel.DETERMINISTIC),
+    network=NetworkPath(2.5e6),
+    edges=(EdgeSpec(Tier("edge", 0.018, service_model=ServiceModel.EXPONENTIAL)),),
+)
+
+
+# ---------------------------------------------------------------------------
+# the tentpole: closed-form sojourn distributions
+# ---------------------------------------------------------------------------
+
+
+class TestSojournQuantiles:
+    def test_mm1_exact_closed_form(self):
+        """Acceptance: single-station M/M/1 quantiles exact to <= 1e-9 vs the
+        closed form t_q = -ln(1-q)/(mu - lam), under BOTH methods."""
+        lam, mu = 8.0, 10.0
+        st = _mm1_station(lam, mu)
+        for q in (0.5, 0.9, 0.95, 0.99, 0.999):
+            exact = -math.log1p(-q) / (mu - lam)
+            for method in ("euler", "asymptote"):
+                got = T.sojourn_quantile([st], q, method=method)
+                assert abs(got - exact) / exact <= 1e-9, (q, method)
+
+    def test_mm1_cdf_matches_exponential(self):
+        lam, mu = 5.0, 8.0
+        st = _mm1_station(lam, mu)
+        t = np.linspace(0.05, 3.0, 20)
+        np.testing.assert_allclose(
+            T.sojourn_cdf([st], t), 1.0 - np.exp(-(mu - lam) * t), atol=2e-8)
+
+    def test_md1_quantile_vs_simulation(self):
+        lam, s = 8.0, 0.1  # rho = 0.8
+        st = T.proc_station(lam, T.KIND_DET, s, 0.0, 1.0)
+        res = S.simulate_on_device(lam, S.Deterministic(s), n=400_000, seed=1)
+        for q in (0.9, 0.99):
+            pred = T.sojourn_quantile([st], q)
+            obs = res.percentile(q * 100)
+            assert abs(pred - obs) / obs < 0.10, (q, pred, obs)
+
+    def test_low_rho_md1_quantile_below_atom_is_service_time(self):
+        # rho = 0.05: P(W = 0) = 0.95 > q=0.5, so the q-quantile is the
+        # (deterministic) service time itself. The Euler inversion converges
+        # to the jump midpoint AT the atom, so the bisection lands within a
+        # Gibbs ripple of s — sub-percent, documented in sojourn_cdf.
+        st = T.proc_station(0.5, T.KIND_DET, 0.1, 0.0, 1.0)
+        assert T.sojourn_quantile([st], 0.5) == pytest.approx(0.1, rel=1e-2)
+
+    def test_mg1_gamma_match_vs_lognormal_sim(self):
+        # cv^2 = 0.25 GENERAL tier: gamma transform vs lognormal draws is a
+        # quantified approximation — a few percent at p99, not gated
+        lam, s, var = 5.0, 0.1, 0.0025
+        st = T.proc_station(lam, T.KIND_GAMMA, s, var, 1.0)
+        res = S.simulate_on_device(lam, S.LogNormal(s, var), n=400_000, seed=3)
+        pred = T.sojourn_quantile([st], 0.99)
+        obs = res.percentile(99)
+        assert abs(pred - obs) / obs < 0.10
+
+    def test_tandem_offload_p99_vs_simulation(self):
+        lam, s, bw, req, res_b = 8.0, 0.05, 2.5e6, 50_000, 5_000
+        stations = [
+            T.nic_station(lam, req, bw),
+            T.proc_station(lam, T.KIND_DET, s, 0.0, 1.0),
+            T.nic_station(lam, res_b, bw),
+        ]
+        sim = S.simulate_offload(lam, S.Deterministic(s), 1, bandwidth_Bps=bw,
+                                 req_bytes=req, res_bytes=res_b, n=400_000, seed=2)
+        for q in (0.9, 0.95, 0.99):
+            pred = T.sojourn_quantile(stations, q)
+            obs = sim.percentile(q * 100)
+            assert abs(pred - obs) / obs < 0.10, (q, pred, obs)
+
+    def test_composed_mean_matches_analytic_total(self):
+        """E[sum of per-station sojourns] == the Eq. 1/2 closed-form total."""
+        for strategy in ("on_device", "edge[0]"):
+            total = float(np.asarray(SCN.analytic().totals()[strategy]))
+            assert T.sojourn_mean(tail_stations(SCN, strategy)) == \
+                pytest.approx(total, rel=1e-12)
+
+    def test_quantile_monotone_in_q(self):
+        st = tail_stations(SCN, "edge[0]")
+        qs = [0.5, 0.9, 0.95, 0.99, 0.999]
+        vals = [T.sojourn_quantile(st, q) for q in qs]
+        assert all(a < b for a, b in zip(vals, vals[1:]))
+
+    def test_asymptote_close_to_euler_at_p99(self):
+        st = tail_stations(SCN, "edge[0]")
+        e = T.sojourn_quantile(st, 0.99, method="euler")
+        a = T.sojourn_quantile(st, 0.99, method="asymptote")
+        assert abs(a - e) / e < 0.10
+
+    def test_extreme_quantile_hands_off_to_asymptote(self):
+        """Regression (review): beyond the Euler CDF's ~1e-8 accuracy floor,
+        the numeric bisection converges against inversion noise and silently
+        underestimates — such q must route to the asymptote, which is
+        asymptotically exact precisely as q -> 1."""
+        st = T.proc_station(0.5, T.KIND_DET, 1.0, 0.0)
+        q = 1.0 - 1e-12
+        asym = T.sojourn_quantile([st], q, method="asymptote")
+        assert T.sojourn_quantile([st], q) == asym  # euler resolved away
+        assert T.resolve_tail_method(q, "euler") == "asymptote"
+        assert T.resolve_tail_method(0.99, "euler") == "euler"
+        # the batch twin applies the same resolution
+        batch = ScenarioBatch.from_scenarios([SCN])
+        np.testing.assert_allclose(
+            fleet_tail(batch, q).t_dev, fleet_tail(batch, q, method="asymptote").t_dev)
+
+    def test_unstable_station_is_inf(self):
+        st = _mm1_station(10.0, 8.0)
+        assert T.sojourn_quantile([st], 0.99) == math.inf
+        assert T.sojourn_quantile([st], 0.99, method="asymptote") == math.inf
+
+    def test_bad_quantile_rejected(self):
+        st = _mm1_station(1.0, 2.0)
+        for q in (0.0, 1.0, -0.1, 1.5):
+            with pytest.raises(ValueError, match="quantile"):
+                T.sojourn_quantile([st], q)
+        with pytest.raises(ValueError, match="method"):
+            T.sojourn_quantile([st], 0.9, method="bogus")
+
+    def test_kind_codes_match_model_codes(self):
+        # scenario._TAIL_KINDS / tail.KIND_* must stay aligned with the
+        # batched columns' MODEL_CODES — fleet_tail reuses them unmapped
+        from repro.fleet.batch import MODEL_CODES
+        assert MODEL_CODES[ServiceModel.DETERMINISTIC] == T.KIND_DET
+        assert MODEL_CODES[ServiceModel.EXPONENTIAL] == T.KIND_EXP
+        assert MODEL_CODES[ServiceModel.GENERAL] == T.KIND_GAMMA
+
+
+class TestAnalyticTail:
+    def test_strategy_keys_match_analytic(self):
+        tails = SCN.analytic_tail(0.99)
+        assert set(tails) == set(SCN.analytic().totals())
+
+    def test_p99_above_mean(self):
+        tails = SCN.analytic_tail(0.99)
+        totals = SCN.analytic().totals()
+        for k in tails:
+            assert tails[k] > float(np.asarray(totals[k]))
+
+    def test_fleet_tail_matches_scalar_on_sweep(self):
+        """Acceptance: tail_vec matches scalar tail.py to <= 1e-6 relative
+        (the full-corpus version is gated in the validate harness)."""
+        scns = SCN.sweep("workload.arrival_rate", np.linspace(2.0, 14.0, 7))
+        batch = ScenarioBatch.from_scenarios(scns)
+        for method in ("euler", "asymptote"):
+            pred = fleet_tail(batch, 0.99, method=method)
+            for i, s in enumerate(scns):
+                sc = analytic_tail(s, 0.99, method=method)
+                vt = pred.totals(i)
+                for k, v in sc.items():
+                    if math.isinf(v):
+                        assert math.isinf(vt[k])
+                        continue
+                    assert abs(v - vt[k]) / v <= 1e-6, (method, i, k)
+
+    def test_fleet_tail_best_edge_convention(self):
+        batch = ScenarioBatch.from_scenarios([SCN])
+        pred = fleet_tail(batch, 0.99)
+        tails = SCN.analytic_tail(0.99)
+        best = min(tails, key=tails.get)
+        assert pred.strategy_names()[0] == best
+
+    def test_fleet_tail_rejects_bad_inputs(self):
+        batch = ScenarioBatch.from_scenarios([SCN])
+        with pytest.raises(ValueError, match="quantile"):
+            fleet_tail(batch, 1.2)
+        with pytest.raises(ValueError, match="method"):
+            fleet_tail(batch, 0.9, method="nope")
+
+
+# ---------------------------------------------------------------------------
+# percentile crossovers: the new result class
+# ---------------------------------------------------------------------------
+
+
+class TestQuantileCrossovers:
+    def test_p99_bandwidth_crossover_shifts_up(self):
+        """Offload paths stack three queues, so their tails are heavier than
+        the single device queue's: the p99 crossover needs MORE bandwidth
+        than the mean crossover — a statement the paper's mean forms cannot
+        express."""
+        cm = SCN.crossovers("bandwidth")
+        cq = SCN.crossovers("bandwidth", quantile=0.99)
+        assert cm.value is not None and cq.value is not None
+        assert cq.value > cm.value
+        assert cq.offload_wins_above is True
+
+    def test_p99_crossover_consistent_with_tail_evaluation(self):
+        cq = SCN.crossovers("bandwidth", quantile=0.99)
+        lo = SCN.replaced("network.bandwidth_Bps", cq.value * 0.8)
+        hi = SCN.replaced("network.bandwidth_Bps", cq.value * 1.25)
+        tl, th = lo.analytic_tail(0.99), hi.analytic_tail(0.99)
+        assert tl["on_device"] < tl["edge[0]"]
+        assert th["edge[0]"] < th["on_device"]
+
+    def test_quantile_tenancy_crossover(self):
+        scn = Scenario(
+            workload=Workload(2.0, 50_000, 4_000),
+            device=Tier("dev", 0.06),
+            network=NetworkPath(12.5e6),
+            edges=(EdgeSpec(Tier("edge", 0.02)),),
+        )
+        cm = scn.crossovers("tenancy", max_tenants=256)
+        cq = scn.crossovers("tenancy", quantile=0.99, max_tenants=256)
+        assert cm.value is not None and cq.value is not None
+        # heavier tails at the shared edge: on-device wins at no MORE tenants
+        assert cq.value <= cm.value
+        # the bracketed search equals an exhaustive scan of the same quantile
+        tails_dev = scn.analytic_tail(0.99)["on_device"]
+        template = scn.edges[0].own_stream(scn.workload)
+        for m in range(1, int(cq.value) + 1):
+            bg = (template,) * (m - 1)
+            scn_m = Scenario(workload=scn.workload, device=scn.device,
+                             network=scn.network, allow_unstable=True,
+                             edges=(EdgeSpec(scn.edges[0].tier, background=bg),))
+            te = scn_m.analytic_tail(0.99)["edge[0]"]
+            assert (te > tails_dev) == (m == int(cq.value)), m
+
+    def test_quantile_tenancy_rejects_unknown_kwargs(self):
+        # regression (review): the quantile branch used to swallow typos the
+        # mean branch rejects
+        with pytest.raises(TypeError, match="unexpected keyword"):
+            SCN.crossovers("tenancy", quantile=0.99, tenant_templates=None)
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware manager (satellite 1: tail_z symmetry; tentpole: slo_quantile)
+# ---------------------------------------------------------------------------
+
+
+def _snap(lam=10.0, bw=2.5e6):
+    return TelemetrySnapshot(time_s=0.0, lam_dev=lam, bandwidth_Bps=bw)
+
+
+class TestManagerSLO:
+    def test_tail_z_is_symmetric_now(self):
+        """Regression (ISSUE 5 satellite): with identical device and edge
+        queues and no network legs, any tail_z must leave the comparison a
+        tie — the old code inflated only the edge wait, biasing every
+        decision toward on-device."""
+        wl = Workload(10.0, 0.0, 0.0)
+        dev = Tier("dev", 0.05, service_model=ServiceModel.EXPONENTIAL)
+        edge = EdgeServerState(name="e", service_rate=20.0, arrival_rate=10.0,
+                               service_time_s=0.05, service_var=0.0025)
+        for z in (0.0, 0.5, 2.0):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                mgr = AdaptiveOffloadManager(dev, tail_z=z, return_results=False)
+            d = mgr.decide(wl, _snap(), [edge])
+            assert d.t_dev == pytest.approx(d.t_edges[0], rel=1e-12), z
+
+    def test_tail_z_warns_deprecated(self):
+        with pytest.warns(DeprecationWarning, match="slo_quantile"):
+            AdaptiveOffloadManager(Tier("d", 0.05), tail_z=1.0)
+
+    def test_tail_z_and_slo_quantile_exclusive(self):
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            AdaptiveOffloadManager(Tier("d", 0.05), tail_z=1.0, slo_quantile=0.99)
+
+    def test_slo_quantile_validated(self):
+        for bad in (0.0, 1.0, 1.5):
+            with pytest.raises(ValueError, match="slo_quantile"):
+                AdaptiveOffloadManager(Tier("d", 0.05), slo_quantile=bad)
+
+    def test_slo_decision_matches_analytic_tail(self):
+        """Manager SLO predictions == Scenario.analytic_tail on dedicated
+        k=1 edges (the same coherence the mean paths are pinned to)."""
+        mgr = SCN.manager(slo_quantile=0.99)
+        d = mgr.decide(SCN.workload, SCN.snapshot(), SCN.edge_states())
+        tails = SCN.analytic_tail(0.99)
+        assert d.t_dev == pytest.approx(tails["on_device"], rel=1e-12)
+        assert d.t_edges[0] == pytest.approx(tails["edge[0]"], rel=1e-12)
+
+    def test_slo_mode_flips_decision_on_tail_heavy_edge(self):
+        """An edge that wins on the mean but loses at p99 (high service
+        variance) must flip once the SLO objective is active."""
+        wl = Workload(6.0, 0.0, 0.0)
+        dev = Tier("dev", 0.11, service_model=ServiceModel.DETERMINISTIC)
+        s_e, cv2 = 0.05, 8.0
+        edge = EdgeServerState(name="e", service_rate=1.0 / s_e, arrival_rate=6.0,
+                               service_time_s=s_e, service_var=cv2 * s_e * s_e)
+        mean_mgr = AdaptiveOffloadManager(dev, return_results=False)
+        slo_mgr = AdaptiveOffloadManager(dev, slo_quantile=0.99,
+                                         return_results=False)
+        d_mean = mean_mgr.decide(wl, _snap(lam=6.0), [edge])
+        d_slo = slo_mgr.decide(wl, _snap(lam=6.0), [edge])
+        assert d_mean.edge_index == 0  # edge wins the mean comparison
+        assert d_slo.edge_index == ON_DEVICE  # p99 prefers the det device
+
+    def test_slo_mode_in_replay_scores_quantiles(self):
+        from repro.fleet import make_trace, replay
+        from repro.fleet.traces import step_signal
+
+        tr = make_trace(40.0, 1.0,
+                        bandwidth_Bps=lambda t: step_signal(
+                            t, [(0.0, 2.5e6), (20.0, 2.5e5)]),
+                        arrival_rate=8.0)
+        rr = replay(SCN, tr, slo_quantile=0.99, seed=0)
+        rm = replay(SCN, tr, seed=0)
+        assert rr.adaptive_wins
+        # quantile scores dominate the mean scores epoch for epoch
+        assert rr.policies["on_device"].mean_latency_s > \
+            rm.policies["on_device"].mean_latency_s
+
+
+class TestClusterSLO:
+    def test_predict_decisions_coheres_with_slo_manager(self):
+        from repro.core.scenario import ClusterSpec
+        from repro.fleet import predict_decisions
+
+        spec = ClusterSpec(base=Scenario(
+            workload=Workload(2.0, 40_000, 2_000),
+            device=Tier("cpu", 0.4),
+            network=NetworkPath(12.5e6),
+            edges=(EdgeSpec(Tier("fast", 0.03)), EdgeSpec(Tier("slow", 0.18))),
+        ), n_clients=4)
+        lam_hat = spec.arrival_rates()
+        bw = 12.5e6
+        choices, t_dev, t_edge = predict_decisions(
+            spec, lam_hat, bw, np.zeros((4, 2)), np.zeros(2), slo_quantile=0.99)
+        mgr = AdaptiveOffloadManager(spec.base.device, slo_quantile=0.99,
+                                     tail_method="asymptote")
+        d = mgr.decide(spec.base.workload, spec.base.snapshot(),
+                       spec.base.edge_states())
+        assert choices[0] == d.edge_index
+        assert t_dev[0] == pytest.approx(d.t_dev, rel=1e-9)
+        for j in range(2):
+            assert t_edge[0][j] == pytest.approx(d.t_edges[j], rel=1e-9)
+
+    def test_equilibrium_slo_converges_and_reports_quantiles(self):
+        from repro.core.scenario import ClusterSpec
+        from repro.fleet import solve_equilibrium
+
+        spec = ClusterSpec(base=Scenario(
+            workload=Workload(2.0, 40_000, 2_000),
+            device=Tier("cpu", 0.4),
+            network=NetworkPath(12.5e6),
+            edges=(EdgeSpec(Tier("fast", 0.03)), EdgeSpec(Tier("slow", 0.18))),
+        ), n_clients=8)
+        eq_mean = solve_equilibrium(spec)
+        eq_slo = solve_equilibrium(spec, slo_quantile=0.99)
+        assert eq_slo.converged
+        # quantile latencies dominate the means at the same fixed point shape
+        assert eq_slo.mean_latency_s > eq_mean.mean_latency_s
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: instability-pocket crossovers
+# ---------------------------------------------------------------------------
+
+
+class TestCrossoverAdjacency:
+    def test_inf_pocket_is_not_a_crossover(self):
+        """Regression: a sign change ACROSS an instability pocket used to be
+        bisected into the inf region and reported as a bogus crossover."""
+
+        def diff(x):
+            if x < 0.3:
+                return -1.0
+            if x < 0.6:
+                return math.inf
+            return 1.0
+
+        c = solve_crossover(diff, 0.0, 1.0, samples=101)
+        assert c.value is None and c.offload_wins_above is None
+
+    def test_nan_pocket_is_not_a_crossover(self):
+        def diff(x):
+            if x < 0.3:
+                return 1.0
+            if x < 0.6:
+                return math.nan
+            return -1.0
+
+        assert solve_crossover(diff, 0.0, 1.0, samples=101).value is None
+
+    def test_adjacent_sign_change_still_found(self):
+        c = solve_crossover(lambda x: x - 0.37, 0.0, 1.0, samples=101)
+        assert c.value == pytest.approx(0.37, abs=1e-9)
+        assert c.offload_wins_above is False  # diff < 0 above the root
+
+    def test_crossover_after_inf_prefix_still_found(self):
+        # the common real shape: edge NIC unstable at low bandwidth (inf
+        # prefix), then finite with a genuine crossover
+        def diff(x):
+            if x < 0.2:
+                return math.inf
+            return 0.5 - x
+
+        c = solve_crossover(diff, 0.0, 1.0, samples=201)
+        assert c.value == pytest.approx(0.5, abs=1e-8)
+
+    def test_fleet_crossover_agrees_on_inf_pocket_scenario(self):
+        """The vectorized scan must apply the same adjacency rule: a spec
+        whose diff has an instability pocket between opposite-sign regions
+        reports no crossover on BOTH paths."""
+        from repro.fleet import fleet_crossover
+
+        # device much faster than the edge: offload never wins at any
+        # bandwidth, but low-bandwidth samples are inf (NIC unstable), so a
+        # pocket-pairing bug would fabricate a crossover at the boundary
+        scn = Scenario(
+            workload=Workload(9.0, 120_000, 4_000),
+            device=Tier("dev", 0.01),
+            network=NetworkPath(2.5e6),
+            edges=(EdgeSpec(Tier("edge", 0.09)),),
+            allow_unstable=True,
+        )
+        c = scn.crossovers("bandwidth")
+        fc = fleet_crossover(ScenarioBatch.from_scenarios([scn]), "bandwidth")
+        assert c.value is None
+        assert not fc.found[0]
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: vectorized k=1 station_pass
+# ---------------------------------------------------------------------------
+
+
+class TestStationPassVectorized:
+    def test_matches_sequential_loop(self):
+        rng = np.random.default_rng(7)
+        for n, lam_s in ((400, 0.1), (50_000, 0.02)):
+            arr = np.cumsum(rng.exponential(lam_s, size=n))
+            svc = rng.exponential(lam_s * 0.8, size=n)
+            ref = _station_pass_k1_loop(arr, svc)
+            vec = station_pass(arr, svc, 1)
+            # same recursion, different float association order: equal to
+            # float64 roundoff on the departure times
+            assert np.max(np.abs(ref - vec) / ref) < 1e-12
+
+    def test_empty_input_returns_empty(self):
+        # regression (review): the old loop returned an empty array; the
+        # vectorized path must not IndexError on zero jobs
+        out = station_pass(np.empty(0), np.empty(0), 1)
+        assert out.shape == (0,)
+
+    def test_deterministic_saturated_and_idle_extremes(self):
+        # idle: every job starts at its arrival
+        arr = np.array([0.0, 10.0, 20.0])
+        svc = np.array([1.0, 1.0, 1.0])
+        np.testing.assert_allclose(station_pass(arr, svc, 1), [1.0, 11.0, 21.0])
+        # saturated: one long busy period
+        arr = np.zeros(4)
+        np.testing.assert_allclose(station_pass(arr, np.ones(4), 1),
+                                   [1.0, 2.0, 3.0, 4.0])
+
+    def test_k1_meaningfully_faster_than_loop(self):
+        """Acceptance: the vectorized k=1 path is measurably faster on the
+        100k-job validate runs (>= 5x here; ~100x typical)."""
+        import time
+
+        rng = np.random.default_rng(0)
+        n = 100_000
+        arr = np.cumsum(rng.exponential(0.1, size=n))
+        svc = rng.exponential(0.08, size=n)
+        t0 = time.perf_counter()
+        _station_pass_k1_loop(arr, svc)
+        t_loop = time.perf_counter() - t0
+        station_pass(arr, svc, 1)  # warm
+        t0 = time.perf_counter()
+        station_pass(arr, svc, 1)
+        t_vec = time.perf_counter() - t0
+        assert t_loop / t_vec > 5.0, (t_loop, t_vec)
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: Mixture input validation
+# ---------------------------------------------------------------------------
+
+
+class TestMixtureValidation:
+    def test_empty_components_raise_value_error(self):
+        # used to be a ZeroDivisionError out of the weight normalization
+        with pytest.raises(ValueError, match="at least one component"):
+            Mixture(components=(), weights=())
+
+    def test_negative_weight_raises(self):
+        with pytest.raises(ValueError, match=">= 0"):
+            Mixture(components=(S.Deterministic(0.1), S.Exponential(0.2)),
+                    weights=(1.5, -0.5))
+
+    def test_nan_weight_raises_at_construction(self):
+        # regression (review): NaN slipped past `w < 0` and failed later
+        # inside rng.choice with a cryptic sampling error
+        with pytest.raises(ValueError, match="finite"):
+            Mixture(components=(S.Deterministic(0.1), S.Exponential(0.2)),
+                    weights=(float("nan"), 1.0))
+        with pytest.raises(ValueError, match="finite"):
+            Mixture(components=(S.Deterministic(0.1),), weights=(float("inf"),))
+
+    def test_zero_total_weight_raises(self):
+        with pytest.raises(ValueError, match="positive"):
+            Mixture(components=(S.Deterministic(0.1),), weights=(0.0,))
+
+    def test_length_mismatch_raises(self):
+        with pytest.raises(ValueError, match="weights"):
+            Mixture(components=(S.Deterministic(0.1),), weights=(0.5, 0.5))
+
+    def test_valid_mixture_still_normalizes_and_samples(self):
+        m = Mixture(components=(S.Deterministic(0.1), S.Exponential(0.2)),
+                    weights=(3.0, 1.0))
+        assert m.weights == pytest.approx((0.75, 0.25))
+        rng = np.random.default_rng(0)
+        x = m.sample(1000, rng)
+        assert x.shape == (1000,) and np.all(x > 0)
+
+
+# ---------------------------------------------------------------------------
+# satellite 5: tenancy crossover bracketing
+# ---------------------------------------------------------------------------
+
+
+class TestTenancyBracketing:
+    WL = Workload(arrival_rate=10.0, req_bytes=25_000, res_bytes=2_000)
+    DEV = Tier("dev", 0.035)
+    NET = NetworkPath(2.5e6)
+
+    def _linear_scan(self, wl, dev, edge, net, template, max_tenants):
+        from repro.core.latency import on_device_latency
+
+        td = float(np.asarray(on_device_latency(wl, dev)))
+        for m in range(1, max_tenants + 1):
+            te = float(np.asarray(
+                multitenant_edge_latency(wl, edge, net, [template] * m)))
+            if te > td:
+                return m
+        return None
+
+    @pytest.mark.parametrize("edge_s,tpl_rate,max_tenants", [
+        (0.005, 2.0, 1024),   # crossover in the middle
+        (0.005, 2.0, 3),      # max_tenants below the crossover -> None
+        (0.030, 2.0, 1024),   # heavy edge: crossover at m=1 or tiny
+        (0.001, 0.1, 64),     # light tenants: offload may win everywhere
+    ])
+    def test_equals_linear_scan(self, edge_s, tpl_rate, max_tenants):
+        edge = Tier("e", edge_s)
+        template = TenantStream(arrival_rate=tpl_rate, service_mean_s=edge_s,
+                                service_var=0.0)
+        got = tenancy_crossover(self.WL, self.DEV, edge, self.NET, template,
+                                max_tenants=max_tenants)
+        want = self._linear_scan(self.WL, self.DEV, edge, self.NET, template,
+                                 max_tenants)
+        assert got == want
+
+    def test_smallest_true_generic(self):
+        for threshold in (1, 2, 3, 7, 64, 100):
+            calls = []
+
+            def pred(m, t=threshold):
+                calls.append(m)
+                return m >= t
+
+            assert smallest_true(pred, 100) == threshold
+            assert len(calls) <= 2 * math.ceil(math.log2(100)) + 2
+        assert smallest_true(lambda m: False, 100) is None
+        assert smallest_true(lambda m: True, 0) is None

@@ -212,6 +212,11 @@ class TestDifferentialSmoke:
         assert rep.passed
         assert rep.gate.n == len(sub)
         assert rep.gate.mean_pct <= 5.0
+        # the fast tail smoke: analytic p99 vs simulated percentile(99) over
+        # the exact-transform members, scalar-vs-vectorized tail everywhere
+        assert rep.tail.n >= 5
+        assert rep.tail_passed and rep.tail.mean_pct <= 10.0
+        assert rep.tail_vec_max_rel_err <= 1e-6
         for r in rep.entries:
             assert r.sim_backend in ("fleet", "scalar")
             assert r.sim_ci is not None and r.sim_ci.lo <= r.sim_mean_s <= r.sim_ci.hi
@@ -272,6 +277,12 @@ class TestFullGate:
         assert rep.gate.n >= 30
         assert rep.gate.mean_pct <= 5.0, rep.gate
         assert rep.gate.within_10_frac == 1.0, rep.gate
+        # tail-percentile gate (ISSUE 5 acceptance): analytic p99 within 10%
+        # MAPE of simulated percentile(99) over the tail-gated entries, and
+        # fleet_tail matching scalar analytic_tail to <= 1e-6 everywhere
+        assert rep.tail.n >= 20
+        assert rep.tail.mean_pct <= 10.0, rep.tail
+        assert rep.tail_vec_max_rel_err <= 1e-6
         assert rep.passed
         # every simulated entry got a CI; gated entries resolve their own error
         for r in rep.entries:
