@@ -1,8 +1,17 @@
-"""Kernel rows for the benchmark CSV: reference-path timing + validated
-max-abs error of the Pallas kernel (interpret mode) at a representative shape.
+"""Kernel rows for the benchmark CSV + the ``BENCH_kernels.json`` artifact:
+reference-path timing + validated max-abs error of the Pallas kernel
+(interpret mode) at a representative shape.
+
+``max_abs_err`` values are headline-gated by ``check_regression`` (a 10x
+error growth trips the gate) — a numerically-broken kernel change can't land
+silently. Errors are floored at ``ERR_FLOOR`` so a kernel that happens to be
+bit-exact against its reference still yields a meaningful ratio baseline.
 """
 
 from __future__ import annotations
+
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -20,9 +29,20 @@ from .common import emit, timed
 
 KEY = jax.random.PRNGKey(0)
 
+ERR_FLOOR = 1e-9  # measurement floor for bit-exact kernels (keeps ratios finite)
 
-def kernel_rows() -> None:
+
+def _err(out, ref) -> float:
+    return max(float(jnp.max(jnp.abs(out - ref))), ERR_FLOOR)
+
+
+def kernel_rows(out_dir: Path | None = None) -> dict:
     ks = jax.random.split(KEY, 5)
+    report: dict[str, dict] = {}
+
+    def record(name: str, us: float, err: float) -> None:
+        report[name] = {"us_per_call": us, "max_abs_err": err}
+        emit(f"kernel_{name}", us, f"max_err={err:.2e}")
 
     # flash attention
     q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
@@ -30,7 +50,7 @@ def kernel_rows() -> None:
     v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
     ref, us = timed(lambda: jax.block_until_ready(flash_attention(q, k, v, impl="xla")))
     out = flash_attention(q, k, v, impl="interpret", blk_q=64, blk_k=64)
-    emit("kernel_flash_attention", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")
+    record("flash_attention", us, _err(out, ref))
 
     # decode attention
     qd = jax.random.normal(ks[0], (2, 1, 8, 64), jnp.float32)
@@ -38,7 +58,7 @@ def kernel_rows() -> None:
     vc = jax.random.normal(ks[2], (2, 512, 2, 64), jnp.float32)
     ref, us = timed(lambda: jax.block_until_ready(decode_attention(qd, kc, vc, jnp.int32(511), impl="xla")))
     out = decode_attention(qd, kc, vc, jnp.int32(511), impl="interpret", blk_k=128)
-    emit("kernel_decode_attention", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")
+    record("decode_attention", us, _err(out, ref))
 
     # ssm scan
     B, T, D, N = 2, 128, 128, 8
@@ -49,14 +69,14 @@ def kernel_rows() -> None:
     A = -jnp.exp(jax.random.normal(ks[4], (D, N)) * 0.5)
     ref, us = timed(lambda: jax.block_until_ready(ssm_scan_reference(dt, Bc, Cc, u, A)[0]))
     out = ssm_scan(dt, Bc, Cc, u, A, impl="interpret", blk_t=32, blk_d=64)
-    emit("kernel_ssm_scan", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")
+    record("ssm_scan", us, _err(out, ref))
 
     # rmsnorm
     x = jax.random.normal(ks[0], (8, 128, 512), jnp.float32)
     sc = jax.random.normal(ks[1], (512,)) * 0.1
     ref, us = timed(lambda: jax.block_until_ready(rmsnorm_reference(x, sc)))
     out = rmsnorm(x, sc, impl="interpret")
-    emit("kernel_rmsnorm", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")
+    record("rmsnorm", us, _err(out, ref))
 
     # lindley scan (the fleet simulator's per-station recurrence)
     rng = np.random.default_rng(0)
@@ -64,4 +84,8 @@ def kernel_rows() -> None:
     svc = jnp.asarray(rng.exponential(0.05, (16, 1024)), jnp.float32)
     ref, us = timed(lambda: jax.block_until_ready(lindley_scan(arr, svc, impl="xla")))
     out = lindley_scan(arr, svc, impl="interpret", blk_b=8, blk_t=256)
-    emit("kernel_lindley_scan", us, f"max_err={float(jnp.max(jnp.abs(out - ref))):.2e}")
+    record("lindley_scan", us, _err(out, ref))
+
+    if out_dir is not None:
+        (out_dir / "BENCH_kernels.json").write_text(json.dumps(report, indent=2))
+    return report

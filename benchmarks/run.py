@@ -11,7 +11,10 @@ JSON artifact under ``--out``:
   * ``validate``      -> BENCH_validate.json (fidelity-gate cost + headline MAPE)
   * ``tail``          -> BENCH_tail.json (sojourn-quantile throughput +
                          asymptote-vs-Euler gap + station_pass speedup)
-  * ``kernels``       -> CSV rows only (interpret-mode correctness latency)
+  * ``kernels``       -> BENCH_kernels.json (per-kernel reference latency +
+                         validated interpret-mode max-abs error)
+  * ``measure``       -> BENCH_measure.json (engine tokens/s, harness
+                         requests/s, fit wall time, measured-gate MAPE)
   * ``roofline``      -> CSV rows from dry-run artifacts, when present
 
 An unknown ``--only`` family is an error (nonzero exit, known families
@@ -54,8 +57,13 @@ def run_kernels(out_dir: Path) -> dict:
     # not a perf claim; rows document call overhead + validated tolerance)
     from .kernel_bench import kernel_rows
 
-    kernel_rows()
-    return {}
+    return kernel_rows(out_dir)
+
+
+def run_measure(out_dir: Path) -> dict:
+    from .measure_bench import measure_rows
+
+    return measure_rows(out_dir)
 
 
 def run_fleet(out_dir: Path) -> dict:
@@ -99,6 +107,7 @@ BENCHES = {
     "cluster": run_cluster,
     "validate": run_validate,
     "tail": run_tail,
+    "measure": run_measure,
     "roofline": run_roofline,
 }
 

@@ -27,7 +27,10 @@ cfg = get_config("starcoder2_3b").reduced(seq_chunk=8)
 params = lm.init_model(cfg, jax.random.PRNGKey(0))
 engine = Engine(cfg, params, ServeConfig(slots=2, max_seq=64))
 
-# profile the device by serving a short burst (paper §4.2)
+# profile the device by serving a short burst (paper §4.2). warmup() first:
+# JIT compilation would otherwise dominate a 6-request burst and inflate the
+# profiled service time by orders of magnitude.
+engine.warmup([12])
 wl_gen = PoissonWorkload(WorkloadConfig(arrival_rate=50.0, prompt_len=12,
                                         max_new_tokens=4, vocab=cfg.vocab_size))
 for r in wl_gen.take(6):
@@ -37,11 +40,19 @@ s_dev, var_dev = engine.observed_service_stats()
 print(f"profiled device service: {s_dev*1e3:.1f} ms/tick (var {var_dev:.2e})")
 
 # --- the deployment, declared once ------------------------------------------
+# The request/response payloads are placed relative to the profiled service
+# so the Fig. 6 bandwidth crossover lands near 5 Mbps regardless of how fast
+# this machine runs the reduced engine: offloading must win at 10/20 Mbps
+# and lose at 2 Mbps. (The edges are 8x-faster 4-wide pods, so the decision
+# is dominated by the transfer time vs the on-device service.)
+req_bytes = max(1, int(0.8 * s_dev * 0.625e6))  # crossover ~5 Mbps
+res_bytes = max(1, req_bytes // 5)
+#
 # allow_unstable: the Fig. 6 schedule deliberately drives the 2 Mbps phase
 # (and possibly the engine itself) past saturation — the models report inf
 # there and Algorithm 1 falls back to the stable strategy.
 scn = Scenario(
-    workload=Workload(arrival_rate=10.0, req_bytes=250_000, res_bytes=2_000),
+    workload=Workload(arrival_rate=10.0, req_bytes=req_bytes, res_bytes=res_bytes),
     device=Tier("device-engine", s_dev, service_model=ServiceModel.EXPONENTIAL),
     edges=(
         EdgeSpec(Tier("edge-pod-A", s_dev / 8, parallelism_k=4.0,
@@ -66,7 +77,13 @@ for t, mbps in [(0, 20), (20, 10), (40, 2), (60, 20)]:
           f"(pred {d.predicted_latency_s*1e3:6.1f} ms; device {d.t_dev*1e3:6.1f} ms)")
 
 print("\n--- Fig. 7 replay: edge load surge ---")
-for t, (lam_a, lam_b) in [(80, (10, 30)), (160, (80, 30)), (240, (120, 118))]:
+# background load expressed as a fraction of each pod's M/M/4 capacity (the
+# pods' absolute capacity scales with the profiled service time): a mild
+# imbalance picks pod A, a surge on A shifts traffic to pod B, and when both
+# pods saturate the gateway retreats on-device — the paper's Fig. 7 arc.
+edge_cap = 4.0 / gw.edges[0].service_mean_s  # per-pod capacity, rps
+for t, (f_a, f_b) in [(80, (0.10, 0.60)), (160, (0.95, 0.60)), (240, (0.98, 0.97))]:
+    lam_a, lam_b = int(f_a * edge_cap), int(f_b * edge_cap)
     gw.edges[0].background_rate = lam_a
     gw.edges[0].background_service_s = gw.edges[0].service_mean_s
     gw.edges[1].background_rate = lam_b

@@ -114,6 +114,49 @@ class Tier:
             service_var=self.service_var if service_var is None else service_var,
         )
 
+    @classmethod
+    def from_measured(cls, profile, occupancy: int = 1, *,
+                      name: str | None = None) -> "Tier":
+        """Build a tier from a measured service-time profile.
+
+        ``profile`` is duck-typed: anything exposing
+        ``service_moments(occupancy) -> (mean_s, var_s, service_model)``
+        works — canonically a ``repro.measure.MeasuredProfile`` fitted from a
+        real engine run. The measured request-level distribution at the given
+        batch occupancy becomes the tier's two service moments, classified
+        into the paper's taxonomy (M/D/1, M/M/1, or two-moment M/G/1), and
+        ``occupancy`` becomes the effective parallelism k — ``occupancy``
+        requests are in service concurrently, so the aggregate rate is
+        k*mu exactly as in the paper's M/D/k -> M/D/1 folding (§3.5).
+
+        The result is an ordinary :class:`Tier`: it flows through
+        ``analytic()``, ``analytic_tail()``, ``fleet.analytic_vec``,
+        crossovers, and the manager with no special-casing.
+        """
+        if occupancy < 1:
+            raise ValueError(f"occupancy must be >= 1, got {occupancy}")
+        mean_s, var_s, model = profile.service_moments(occupancy)
+        mean_s, var_s = float(mean_s), float(var_s)
+        if not mean_s > 0:
+            raise ValueError(f"measured mean service must be > 0, got {mean_s}")
+        if var_s < 0:
+            raise ValueError(f"measured service variance must be >= 0, got {var_s}")
+        model = ServiceModel(model)
+        meta = {"measured": True, "occupancy": int(occupancy)}
+        for attr in ("arch", "clock", "seed", "n_requests"):
+            if hasattr(profile, attr):
+                meta[attr] = getattr(profile, attr)
+        return cls(
+            name=name or f"measured:{meta.get('arch', 'profile')}@{occupancy}",
+            service_time_s=mean_s,
+            parallelism_k=float(occupancy),
+            service_model=model,
+            # only M/G/1 reads Var[s]; zero it otherwise so equality/
+            # serialization of DETERMINISTIC/EXPONENTIAL tiers stays canonical
+            service_var=var_s if model is ServiceModel.GENERAL else 0.0,
+            meta=meta,
+        )
+
 
 @dataclass(frozen=True)
 class Workload:

@@ -42,6 +42,8 @@ def main(argv=None) -> int:
     params = lm.init_model(cfg, jax.random.PRNGKey(0))
     engine = Engine(cfg, params, ServeConfig(slots=args.slots, max_seq=64))
 
+    # warmup first so JIT compilation never pollutes the profiled service
+    engine.warmup([args.prompt_len])
     wl_gen = PoissonWorkload(WorkloadConfig(
         arrival_rate=args.rps, prompt_len=args.prompt_len,
         max_new_tokens=args.max_new, vocab=cfg.vocab_size,
@@ -55,10 +57,13 @@ def main(argv=None) -> int:
           f"profiled tick {s_dev*1e3:.1f} ms (var {var:.2e})")
 
     dev = Tier("device-engine", s_dev, service_model=ServiceModel.EXPONENTIAL)
+    # payloads scaled to the profiled service: the schedule's bandwidth
+    # crossover lands near 5 Mbps regardless of machine speed
+    req_bytes = max(1, int(0.8 * s_dev * 0.625e6))
     gw = OffloadGateway(
         dev,
         [EdgeHandle("edge0", service_mean_s=s_dev / 8, parallelism_k=4.0)],
-        Workload(args.rps, 250_000, 2_000),
+        Workload(args.rps, req_bytes, max(1, req_bytes // 5)),
         bandwidth_Bps=2.5e6,
     )
     for i, mbps in enumerate(float(x) for x in args.schedule.split(",")):

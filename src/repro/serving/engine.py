@@ -8,14 +8,27 @@ cache region.
 
 The engine is the paper's "accelerator": its measured service times feed the
 queueing models, and the gateway (serving/gateway.py) applies Algorithm 1 to
-route between a device-tier engine and edge-tier engines.
+route between a device-tier engine and edge-tier engines. Timing is
+measurement-grade (repro.measure relies on it):
+
+  * every service stamp is taken AFTER ``jax.block_until_ready`` on the op's
+    outputs — JAX dispatch is asynchronous, so a bare ``time.*`` pair around
+    a jitted call measures dispatch latency, not device compute;
+  * JIT compile time is kept out of steady-state service: :meth:`warmup`
+    compiles the prefill/decode executables up front, and any cold call that
+    does slip through is flagged ``compile=True`` in the service log and
+    excluded from :meth:`observed_service_stats`;
+  * a pluggable ``timer`` lets the measurement harness substitute a seeded,
+    deterministic service-time model for the wall clock (the "simulated
+    clock" mode of ``repro.measure.harness``) while the engine still runs the
+    real model for token-level correctness.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, Iterable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +37,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import lm
 
-__all__ = ["Request", "ServeConfig", "Engine"]
+__all__ = ["Request", "ServeConfig", "ServiceEvent", "Engine"]
 
 
 @dataclass
@@ -35,12 +48,17 @@ class Request:
     arrival_s: float = 0.0
     # filled by the engine:
     tokens_out: list = field(default_factory=list)
+    t_admit: float | None = None  # prefill start (queue wait ends here)
     t_first_token: float | None = None
     t_done: float | None = None
 
     @property
     def latency_s(self) -> float | None:
         return None if self.t_done is None else self.t_done - self.arrival_s
+
+    @property
+    def queue_wait_s(self) -> float | None:
+        return None if self.t_admit is None else self.t_admit - self.arrival_s
 
 
 @dataclass(frozen=True)
@@ -50,13 +68,44 @@ class ServeConfig:
     greedy: bool = True
 
 
-class Engine:
-    """Single-model serving engine over the lm prefill/decode steps."""
+class ServiceEvent(NamedTuple):
+    """One timed engine operation in the service log.
 
-    def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig):
+    ``t`` is the operation's start on the engine clock (simulated or wall);
+    ``occupancy`` is the compute batch the accelerator saw (1 for per-request
+    prefill, the number of active slots for a decode step). ``compile=True``
+    marks a wall-clocked call whose executable was cold (JIT compile included
+    in ``duration_s``) — excluded from steady-state statistics.
+    """
+
+    t: float
+    phase: str  # "prefill" | "decode"
+    duration_s: float
+    occupancy: int
+    rid: int  # request id for prefill; -1 for batched decode steps
+    tokens: int  # prompt tokens (prefill) / tokens emitted (decode)
+    compile: bool = False
+
+
+# timer(phase, run, tokens=..., occupancy=...) -> (run's result, seconds)
+Timer = Callable[..., tuple[Any, float]]
+
+
+class Engine:
+    """Single-model serving engine over the lm prefill/decode steps.
+
+    ``timer`` (optional) replaces the wall clock for service durations: the
+    engine still executes the real jitted ops, but charges each one the
+    seconds the timer returns. ``repro.measure.harness.SimulatedTimer`` uses
+    this for seeded, replayable profiling runs.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig,
+                 timer: Timer | None = None):
         self.cfg = cfg
         self.sc = sc
         self.params = params
+        self.timer = timer
         self._decode = jax.jit(
             lambda p, tok, pos, caches: lm.decode_step(p, cfg, tok, pos, caches)
         )
@@ -71,40 +120,99 @@ class Engine:
         self.remaining = np.zeros(B, np.int32)
         self.queue: list[Request] = []
         self.completed: list[Request] = []
-        self.service_log: list[tuple[float, float]] = []  # (t, service seconds)
+        self.service_log: list[ServiceEvent] = []
+        # executables already compiled (prefill by prompt length; one decode
+        # shape total) — cold wall-clocked calls are flagged in the log
+        self._warm_prefill: set[int] = set()
+        self._warm_decode = False
 
     def _zero_caches(self, batch: int, seq: int):
-        from repro.models.params import abstract_params, init_params
+        from repro.models.params import init_params
         from repro.models.lm import cache_template
 
         tpl = cache_template(self.cfg, batch, seq, enc_len=seq if self.cfg.is_encdec else 0)
         return init_params(tpl, jax.random.PRNGKey(0), jnp.dtype(self.cfg.dtype))
 
     # ------------------------------------------------------------------
+    def _timed(self, phase: str, run: Callable[[], Any], *,
+               tokens: int, occupancy: int) -> tuple[Any, float]:
+        """Run ``run`` and return (result, service seconds). Wall mode blocks
+        on the result BEFORE the closing stamp (async dispatch otherwise makes
+        the measurement a dispatch time, not a service time)."""
+        if self.timer is not None:
+            out, dt = self.timer(phase, run, tokens=tokens, occupancy=occupancy)
+            return out, float(dt)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(run())
+        return out, time.perf_counter() - t0
+
+    def warmup(self, prompt_lens: Iterable[int] = (), *, decode: bool = True) -> None:
+        """Compile the jitted executables outside the measured path.
+
+        JAX specialises ``prefill`` per prompt length, so pass every length
+        the workload can draw. Compile-time is the dominant first-call cost
+        (seconds vs millisecond service times) and would otherwise pollute
+        any measured mean. Runs on scratch inputs; engine state is untouched.
+        """
+        for L in sorted({int(x) for x in prompt_lens}):
+            if L in self._warm_prefill:
+                continue
+            jax.block_until_ready(
+                self._prefill(self.params, jnp.zeros((1, L), jnp.int32)))
+            self._warm_prefill.add(L)
+        if decode and not self._warm_decode:
+            tok = jnp.zeros((self.sc.slots, 1), jnp.int32)
+            jax.block_until_ready(
+                self._decode(self.params, tok, jnp.int32(0), self.caches))
+            self._warm_decode = True
+
+    # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def _admit(self, now: float) -> None:
+    def _admit(self, now: float) -> float:
+        """Admit queued requests into free slots; returns the advanced clock
+        (each prefill occupies the accelerator, so admissions serialise)."""
         for slot in range(self.sc.slots):
             if self.active[slot] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
-            t0 = time.time()
-            prompt = jnp.asarray(req.prompt[None], jnp.int32)
-            logits, caches = self._prefill(self.params, prompt)
+            L = len(req.prompt)
+            cold = self.timer is None and L not in self._warm_prefill
+
+            def run():
+                prompt = jnp.asarray(req.prompt[None], jnp.int32)
+                logits, caches = self._prefill(self.params, prompt)
+                # write this request's cache into the slot (batch index
+                # `slot`) inside the timed region — the copy is device work
+                # the request's service genuinely includes
+                new = jax.tree.map(
+                    lambda full, one: self._write_slot(full, one, slot, L),
+                    self.caches,
+                    caches,
+                )
+                return logits, new
+
+            req.t_admit = now
+            (logits, new_caches), dt = self._timed(
+                "prefill", run, tokens=L, occupancy=1)
+            self.caches = new_caches
+            self._warm_prefill.add(L)
             next_tok = int(jnp.argmax(logits[0, -1]))
-            # write this request's cache into the slot (batch index `slot`)
-            self.caches = jax.tree.map(
-                lambda full, one: self._write_slot(full, one, slot, len(req.prompt)),
-                self.caches,
-                caches,
-            )
-            self.positions[slot] = len(req.prompt)
+            self.positions[slot] = L
             self.remaining[slot] = req.max_new_tokens - 1
             req.tokens_out.append(next_tok)
-            req.t_first_token = now
-            self.active[slot] = req
-            self.service_log.append((now, time.time() - t0))
+            req.t_first_token = now + dt
+            self.service_log.append(
+                ServiceEvent(now, "prefill", dt, 1, req.rid, L, cold))
+            now += dt
+            if self.remaining[slot] <= 0:
+                # single-token request: prefill IS the whole service
+                req.t_done = req.t_first_token
+                self.completed.append(req)
+            else:
+                self.active[slot] = req
+        return now
 
     @staticmethod
     def _write_slot(full, one, slot: int, prompt_len: int):
@@ -120,35 +228,45 @@ class Engine:
 
     # ------------------------------------------------------------------
     def tick(self, now: float | None = None) -> int:
-        """Admit + one decode step for all active slots. Returns #active."""
+        """Admit + one decode step for all active slots. Returns #active.
+
+        ``now`` is the engine clock at tick start (wall time when omitted);
+        completion stamps land at ``now + elapsed service``, so request
+        timestamps are event times, not tick-start times.
+        """
         now = time.time() if now is None else now
-        self._admit(now)
+        now = self._admit(now)
         if not any(r is not None for r in self.active):
             return 0
-        t0 = time.time()
+        cold = self.timer is None and not self._warm_decode
+
         last = np.zeros((self.sc.slots, 1), np.int32)
         for slot, req in enumerate(self.active):
             if req is not None:
                 last[slot, 0] = req.tokens_out[-1]
         pos = int(max(self.positions[s] for s, r in enumerate(self.active) if r is not None))
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(last), jnp.int32(pos), self.caches
-        )
+        n_active = sum(r is not None for r in self.active)
+
+        def run():
+            return self._decode(self.params, jnp.asarray(last), jnp.int32(pos), self.caches)
+
+        (logits, new_caches), dt = self._timed(
+            "decode", run, tokens=n_active, occupancy=n_active)
+        self.caches = new_caches
+        self._warm_decode = True
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
-        dt = time.time() - t0
-        n_active = 0
         for slot, req in enumerate(self.active):
             if req is None:
                 continue
-            n_active += 1
             req.tokens_out.append(int(nxt[slot]))
             self.positions[slot] += 1
             self.remaining[slot] -= 1
             if self.remaining[slot] <= 0 or self.positions[slot] >= self.sc.max_seq - 1:
-                req.t_done = now
+                req.t_done = now + dt
                 self.completed.append(req)
                 self.active[slot] = None
-        self.service_log.append((now, dt))
+        self.service_log.append(
+            ServiceEvent(now, "decode", dt, n_active, -1, n_active, cold))
         return n_active
 
     def drain(self) -> None:
@@ -157,9 +275,11 @@ class Engine:
 
     # ------------------------------------------------------------------
     def observed_service_stats(self) -> tuple[float, float]:
-        """(mean, var) of measured per-tick service times — the paper's
-        profiled service-time input (§4.2)."""
-        if not self.service_log:
+        """(mean, var) of measured per-op service times — the paper's
+        profiled service-time input (§4.2). Cold (compile-bearing) calls are
+        excluded; they measure the XLA compiler, not the accelerator."""
+        durs = [ev.duration_s for ev in self.service_log if not ev.compile]
+        if not durs:
             return 0.0, 0.0
-        arr = np.array([s for _, s in self.service_log])
+        arr = np.array(durs)
         return float(arr.mean()), float(arr.var())

@@ -7,7 +7,10 @@ analytic, vectorized analytic, scalar simulation, batched simulation):
     pinned as a JSON fixture under ``tests/golden/``;
   * :mod:`metrics` — MAPE, per-regime error tables, block-bootstrap CIs;
   * :mod:`differential` — the cross-path runner and fidelity report behind
-    ``python -m repro.launch.validate`` (writes ``VALIDATION.json``).
+    ``python -m repro.launch.validate`` (writes ``VALIDATION.json``);
+  * :mod:`measured` — the hardware-in-the-loop regime: analytic mean/p99 vs
+    latencies *observed* on the real serving engine (paper §5), behind
+    ``python -m repro.launch.measure validate``.
 """
 
 from .corpus import (
@@ -35,6 +38,14 @@ from .differential import (
     run_differential,
     smoke_subset,
     tail_gated,
+)
+from .measured import (
+    DEFAULT_MEASURED_BUDGET_PCT,
+    DEFAULT_MEASURED_TAIL_BUDGET_PCT,
+    MEASURED_VEC_TOL,
+    MeasuredGateReport,
+    measured_scenario,
+    run_measured_gate,
 )
 from .metrics import (
     BootstrapCI,

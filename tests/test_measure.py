@@ -1,0 +1,336 @@
+"""Tier-1 tests for the hardware-in-the-loop measurement subsystem:
+engine timing discipline, workload determinism/validation, the profiling
+harness, the fit layer (known-distribution round-trips), the MeasuredProfile
+artifact, Tier.from_measured, and the measured validation gate."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.latency import ServiceModel, Tier
+from repro.core.scenario import Scenario, analytic, analytic_tail
+from repro.measure import (
+    HarnessConfig,
+    MeasuredTrace,
+    build_profile,
+    classify_service_model,
+    fit_samples,
+    fit_trace,
+    load_profile,
+    run_harness,
+)
+from repro.measure.profile import MeasuredProfile, PROFILE_VERSION
+from repro.serving.workload import PoissonWorkload, WorkloadConfig
+from repro.validate.measured import measured_scenario, run_measured_gate
+
+# the smoke profile: the ISSUE acceptance run (deterministic simulated clock)
+SMOKE = HarnessConfig(arch="starcoder2_3b", n_requests=240, seed=0)
+
+
+@pytest.fixture(scope="module")
+def smoke_trace():
+    return run_harness(SMOKE)
+
+
+@pytest.fixture(scope="module")
+def smoke_profile(smoke_trace):
+    return build_profile(smoke_trace)
+
+
+class TestWorkload:
+    def test_same_seed_identical_stream(self):
+        wc = WorkloadConfig(arrival_rate=50.0, prompt_len=16, prompt_len_jitter=4,
+                            max_new_tokens=8, new_tokens_geometric_p=0.4, seed=7)
+        a = PoissonWorkload(wc).take(40)
+        b = PoissonWorkload(wc).take(40)
+        assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+        assert [r.max_new_tokens for r in a] == [r.max_new_tokens for r in b]
+        assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+
+    def test_different_seed_differs(self):
+        wc = lambda s: WorkloadConfig(arrival_rate=50.0, prompt_len=16,
+                                      prompt_len_jitter=4, seed=s)
+        a = PoissonWorkload(wc(0)).take(20)
+        b = PoissonWorkload(wc(1)).take(20)
+        assert [r.arrival_s for r in a] != [r.arrival_s for r in b]
+
+    def test_jitter_cannot_truncate(self):
+        # jitter >= prompt_len (could go non-positive) and jitter that dips
+        # below the min-length floor both fail eagerly, not silently clamp
+        with pytest.raises(ValueError, match="prompt_len_jitter"):
+            WorkloadConfig(arrival_rate=1.0, prompt_len=8, prompt_len_jitter=8)
+        with pytest.raises(ValueError, match="prompt_len_jitter"):
+            WorkloadConfig(arrival_rate=1.0, prompt_len=6, prompt_len_jitter=3)
+        ok = WorkloadConfig(arrival_rate=1.0, prompt_len=8, prompt_len_jitter=4)
+        assert ok.prompt_len_range == (4, 12)
+
+    def test_validation_errors(self):
+        with pytest.raises(ValueError, match="arrival_rate"):
+            WorkloadConfig(arrival_rate=0.0)
+        with pytest.raises(ValueError, match="geometric"):
+            WorkloadConfig(arrival_rate=1.0, new_tokens_geometric_p=1.0)
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            WorkloadConfig(arrival_rate=1.0, max_new_tokens=0)
+
+    def test_lengths_span_configured_range(self):
+        wc = WorkloadConfig(arrival_rate=50.0, prompt_len=8, prompt_len_jitter=4,
+                            seed=0)
+        lens = {len(r.prompt) for r in PoissonWorkload(wc).take(200)}
+        assert min(lens) == 4 and max(lens) == 12
+
+
+class TestEngineTiming:
+    @pytest.fixture(scope="class")
+    def engine_run(self):
+        from repro.configs import get_config
+        from repro.models import lm
+        from repro.serving.engine import Engine, Request, ServeConfig
+
+        cfg = get_config("starcoder2_3b").reduced(seq_chunk=8)
+        params = lm.init_model(cfg, jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, ServeConfig(slots=1, max_seq=64))
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=8)
+                        .astype(np.int32), max_new_tokens=3) for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.drain()
+        return eng, reqs
+
+    def test_cold_calls_flagged_and_excluded(self, engine_run):
+        eng, _ = engine_run
+        # no warmup() was called: the first prefill at each shape and the
+        # first decode carry JIT compile and must be flagged
+        cold = [ev for ev in eng.service_log if ev.compile]
+        warm = [ev for ev in eng.service_log if not ev.compile]
+        assert cold and warm
+        mean, var = eng.observed_service_stats()
+        durs = np.array([ev.duration_s for ev in warm])
+        assert mean == pytest.approx(float(durs.mean()))
+        # compile time is seconds; steady-state ops are far faster — if cold
+        # calls leaked into the stats the mean would be >> the warm mean
+        assert mean < min(ev.duration_s for ev in cold)
+
+    def test_warmup_precompiles(self):
+        from repro.configs import get_config
+        from repro.models import lm
+        from repro.serving.engine import Engine, Request, ServeConfig
+
+        cfg = get_config("starcoder2_3b").reduced(seq_chunk=8)
+        params = lm.init_model(cfg, jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, ServeConfig(slots=1, max_seq=64))
+        eng.warmup([8])
+        rng = np.random.default_rng(0)
+        eng.submit(Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, size=8)
+                           .astype(np.int32), max_new_tokens=3))
+        eng.drain()
+        assert not any(ev.compile for ev in eng.service_log)
+
+    def test_event_time_stamps_consistent(self, engine_run):
+        eng, reqs = engine_run
+        for r in reqs:
+            assert r.arrival_s <= r.t_admit <= r.t_first_token <= r.t_done
+            assert r.queue_wait_s >= 0
+            assert len(r.tokens_out) == r.max_new_tokens
+        # service log is a serialised schedule: events don't overlap
+        for a, b in zip(eng.service_log, eng.service_log[1:]):
+            assert b.t >= a.t
+
+    def test_single_token_request_completes_at_prefill(self):
+        from repro.configs import get_config
+        from repro.models import lm
+        from repro.serving.engine import Engine, Request, ServeConfig
+
+        cfg = get_config("starcoder2_3b").reduced(seq_chunk=8)
+        params = lm.init_model(cfg, jax.random.PRNGKey(0))
+        eng = Engine(cfg, params, ServeConfig(slots=1, max_seq=64))
+        req = Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                      max_new_tokens=1)
+        eng.submit(req)
+        eng.drain()
+        assert len(req.tokens_out) == 1
+        assert req.t_done == req.t_first_token
+
+
+class TestHarness:
+    def test_deterministic_per_seed(self):
+        hc = HarnessConfig(arch="starcoder2_3b", n_requests=30, seed=3)
+        a = run_harness(hc)
+        b = run_harness(hc)
+        assert a.to_dict() == b.to_dict()
+
+    def test_trace_roundtrip(self, smoke_trace, tmp_path):
+        p = smoke_trace.save(tmp_path / "trace.json")
+        back = MeasuredTrace.load(p)
+        assert back.to_dict() == smoke_trace.to_dict()
+
+    def test_records_consistent(self, smoke_trace):
+        assert len(smoke_trace.requests) == SMOKE.n_requests
+        for r in smoke_trace.requests:
+            assert r.n_decode == r.n_tokens - 1
+            assert r.latency_s == pytest.approx(r.queue_wait_s + r.service_s)
+            # slots=1: in-service time is exactly prefill + own decode steps
+            assert r.service_s == pytest.approx(r.prefill_s + r.decode_s)
+            assert r.occupancy == 1
+
+    def test_lands_near_target_rho(self, smoke_profile):
+        rho = smoke_profile.observed_stat("rho_hat")
+        assert abs(rho - SMOKE.target_rho) < 0.1
+
+
+class TestFit:
+    def test_deterministic_roundtrip(self):
+        f = fit_samples(np.full(200, 0.02), phase="prefill", occupancy=1)
+        assert f.model is ServiceModel.DETERMINISTIC
+        assert f.mean_s == pytest.approx(0.02)
+        assert f.var_s == pytest.approx(0.0)
+
+    def test_exponential_roundtrip(self):
+        rng = np.random.default_rng(0)
+        x = rng.exponential(0.05, 4000)
+        f = fit_samples(x, phase="request", occupancy=1)
+        assert f.model is ServiceModel.EXPONENTIAL
+        assert f.mean_s == pytest.approx(0.05, rel=0.1)
+        assert f.var_s == pytest.approx(0.05**2, rel=0.2)
+
+    def test_gamma_roundtrip_two_moment_match(self):
+        # gamma with SCV = 1/k = 0.25: too variable for DETERMINISTIC, too
+        # regular for EXPONENTIAL -> GENERAL with an exact two-moment match
+        rng = np.random.default_rng(1)
+        k, theta = 4.0, 0.01
+        x = rng.gamma(k, theta, 4000)
+        f = fit_samples(x, phase="request", occupancy=1)
+        assert f.model is ServiceModel.GENERAL
+        assert f.mean_s == pytest.approx(k * theta, rel=0.05)
+        assert f.var_s == pytest.approx(k * theta**2, rel=0.15)
+        assert f.scv == pytest.approx(1.0 / k, rel=0.15)
+
+    def test_classify_edges(self):
+        assert classify_service_model(1.0, 0.0) is ServiceModel.DETERMINISTIC
+        assert classify_service_model(1.0, 1.0) is ServiceModel.EXPONENTIAL
+        assert classify_service_model(1.0, 0.25) is ServiceModel.GENERAL
+        with pytest.raises(ValueError):
+            classify_service_model(0.0, 1.0)
+        with pytest.raises(ValueError):
+            classify_service_model(1.0, -1.0)
+
+    def test_fit_trace_groups(self, smoke_trace):
+        fits = fit_trace(smoke_trace)
+        keys = {(f.phase, f.occupancy) for f in fits}
+        assert ("prefill", 1) in keys
+        assert ("decode", 1) in keys
+        assert ("request", 1) in keys
+        for f in fits:
+            assert f.n >= 8 and f.mean_s > 0
+            assert f.ci_lo_s <= f.mean_s <= f.ci_hi_s
+            assert f.percentile(50) <= f.percentile(99)
+
+
+class TestProfile:
+    def test_json_byte_stability(self, smoke_profile, tmp_path):
+        path = smoke_profile.save(tmp_path / "p.json")
+        raw = path.read_bytes()
+        back = load_profile(path)
+        assert back.dumps().encode() == raw  # byte-for-byte round-trip
+        assert back.service_moments(1) == smoke_profile.service_moments(1)
+
+    def test_version_gate(self, smoke_profile):
+        d = smoke_profile.to_dict()
+        d["version"] = PROFILE_VERSION + 1
+        with pytest.raises(ValueError, match="version"):
+            MeasuredProfile.from_dict(d)
+
+    def test_missing_fit_is_loud(self, smoke_profile):
+        with pytest.raises(KeyError, match="occupancy=7"):
+            smoke_profile.fit_for("request", 7)
+        with pytest.raises(KeyError):
+            smoke_profile.observed_stat("nope")
+
+
+class TestTierFromMeasured:
+    def test_flows_through_all_analytic_paths(self, smoke_profile):
+        tier = Tier.from_measured(smoke_profile, 1)
+        assert tier.service_time_s > 0
+        assert tier.parallelism_k == 1.0
+        assert tier.meta["measured"] is True
+
+        scn = measured_scenario(smoke_profile)
+        assert isinstance(scn, Scenario)
+        pred = analytic(scn)
+        mean = float(np.asarray(pred["on_device"].total))
+        assert np.isfinite(mean) and mean > tier.service_time_s
+
+        q99 = analytic_tail(scn, 0.99)["on_device"]
+        assert np.isfinite(q99) and q99 > mean
+
+        from repro.fleet import ScenarioBatch, fleet_analytic
+
+        fp = fleet_analytic(ScenarioBatch.from_scenarios([scn]))
+        assert float(fp.t_dev[0]) == pytest.approx(mean, rel=1e-9)
+
+    def test_duck_typed_protocol(self):
+        class Stub:
+            arch = "stub"
+
+            def service_moments(self, occupancy):
+                return 0.01, 0.0001, ServiceModel.EXPONENTIAL
+
+        t = Tier.from_measured(Stub(), 2)
+        assert t.service_model is ServiceModel.EXPONENTIAL
+        assert t.parallelism_k == 2.0
+        assert t.service_var == 0.0  # only GENERAL carries Var[s]
+
+    def test_invalid_occupancy(self, smoke_profile):
+        with pytest.raises(ValueError, match="occupancy"):
+            Tier.from_measured(smoke_profile, 0)
+
+
+class TestMeasuredGate:
+    def test_smoke_gate_passes_within_budget(self, smoke_profile):
+        rep = run_measured_gate(smoke_profile)
+        assert rep.mean_mape_pct <= 15.0, (
+            f"analytic mean {rep.analytic_mean_s} vs observed "
+            f"{rep.observed_mean_s}: MAPE {rep.mean_mape_pct:.2f}%")
+        assert rep.tail_passed and rep.vec_passed
+        assert rep.passed
+
+    def test_report_carries_observed_numbers(self, smoke_profile):
+        d = run_measured_gate(smoke_profile).to_dict()
+        assert d["regime"] == "measured"
+        assert d["mean"]["observed_s"] > 0
+        assert d["tail"]["observed_s"] > d["mean"]["observed_s"]
+        assert json.loads(json.dumps(d)) == d  # JSON-clean
+
+    def test_budget_configurable(self, smoke_profile):
+        rep = run_measured_gate(smoke_profile, budget_pct=0.001)
+        assert not rep.mean_passed and not rep.passed
+
+
+class TestCLI:
+    def test_profile_validate_roundtrip(self, tmp_path):
+        from repro.launch.measure import main
+
+        out = tmp_path / "PROFILE.json"
+        rc = main(["profile", "--config", "starcoder2_3b", "--requests", "40",
+                   "--seed", "1", "--out", str(out)])
+        assert rc == 0 and out.exists()
+
+        report = tmp_path / "GATE.json"
+        rc = main(["validate", "--profile", str(out),
+                   "--report-out", str(report)])
+        assert rc == 0
+        d = json.loads(report.read_text())
+        assert d["regime"] == "measured" and d["passed"]
+
+    def test_profile_replayable(self, tmp_path):
+        from repro.launch.measure import main
+
+        a, b = tmp_path / "a.json", tmp_path / "b.json"
+        argv = ["profile", "--config", "starcoder2_3b", "--requests", "25",
+                "--seed", "5"]
+        assert main(argv + ["--out", str(a)]) == 0
+        assert main(argv + ["--out", str(b)]) == 0
+        assert a.read_bytes() == b.read_bytes()
