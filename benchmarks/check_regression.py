@@ -74,6 +74,15 @@ HEADLINES: dict[str, dict[str, tuple[str, float | None, bool]]] = {
         "gate.mean_mape_pct": ("lower", None, False),
         "gate.p99_mape_pct": ("lower", None, False),
     },
+    "BENCH_obs.json": {
+        # pass-flags (1.0 = pass) gated at zero tolerance: observability must
+        # stay free when disabled (<=5% engine overhead) and every audited
+        # decision's terms must re-sum to its totals within 1e-9
+        "tracer.overhead_gate_pass": ("higher", 0.0, False),
+        "audit.resum_gate_pass": ("higher", 0.0, False),
+        "tracer.tokens_per_sec_enabled": ("higher", 0.45, True),
+        "audit.rows_per_sec": ("higher", 0.45, True),
+    },
     # interpret-mode numerics vs reference; 9.0 = an order-of-magnitude error
     # growth trips the gate without flaking on cross-platform BLAS jitter
     "BENCH_kernels.json": {
@@ -162,6 +171,31 @@ def compare(
     return rows, regressions
 
 
+def manifest_notes(fresh_dir: Path, baseline_dir: Path) -> list[str]:
+    """Informational provenance-drift notes: for every compared family whose
+    fresh artifact AND baseline both carry a ``manifest`` block, report what
+    differs (git sha, package versions, platform). Purely informational —
+    the gates above fire regardless; this just says when a delta may be
+    explained by baselines recorded under different provenance."""
+    try:
+        from repro.obs import manifest_delta
+    except ImportError:  # benchmarks runnable without repro on the path
+        return []
+    notes: list[str] = []
+    for fname in sorted(HEADLINES):
+        fresh_path, base_path = fresh_dir / fname, baseline_dir / fname
+        if not (fresh_path.exists() and base_path.exists()):
+            continue
+        try:
+            fm = json.loads(fresh_path.read_text()).get("manifest")
+            bm = json.loads(base_path.read_text()).get("manifest")
+        except (OSError, json.JSONDecodeError):
+            continue
+        for delta in manifest_delta(bm, fm):
+            notes.append(f"{fname}: {delta}")
+    return notes
+
+
 def print_table(rows: list[dict]) -> None:
     if not rows:
         print("no comparable BENCH_*.json families found")
@@ -222,6 +256,11 @@ def main(argv=None) -> int:
                                 tolerance=args.tolerance,
                                 machine_matched=args.machine_matched)
     print_table(rows)
+    notes = manifest_notes(args.fresh, args.baselines)
+    if notes:
+        print("\nbaseline provenance differs from this run (informational):")
+        for note in notes:
+            print(f"  {note}")
     if not rows:
         print("error: nothing compared — wrong --fresh directory?", file=sys.stderr)
         return 2

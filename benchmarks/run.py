@@ -15,7 +15,14 @@ JSON artifact under ``--out``:
                          validated interpret-mode max-abs error)
   * ``measure``       -> BENCH_measure.json (engine tokens/s, harness
                          requests/s, fit wall time, measured-gate MAPE)
+  * ``obs``           -> BENCH_obs.json (tracer-disabled overhead gate,
+                         enabled-tracer tokens/s, audit rows/s + re-sum gate)
   * ``roofline``      -> CSV rows from dry-run artifacts, when present
+
+Every BENCH_*.json written by a run gets a ``manifest`` block stamped in
+(``repro.obs.run_manifest``: seed-free provenance — git sha, config hash,
+package versions; no timestamps) so check_regression can say when a baseline
+came from different provenance.
 
 An unknown ``--only`` family is an error (nonzero exit, known families
 listed) — CI relies on that exit code, so a typo can never silently run
@@ -90,6 +97,12 @@ def run_tail(out_dir: Path) -> dict:
     return tail_rows(out_dir)
 
 
+def run_obs(out_dir: Path) -> dict:
+    from .obs_bench import obs_rows
+
+    return obs_rows(out_dir)
+
+
 def run_roofline(out_dir: Path) -> dict:
     # roofline table from dry-run artifacts, if present
     roof = Path("experiments/roofline")
@@ -108,8 +121,20 @@ BENCHES = {
     "validate": run_validate,
     "tail": run_tail,
     "measure": run_measure,
+    "obs": run_obs,
     "roofline": run_roofline,
 }
+
+
+def stamp_manifests(out_dir: Path) -> None:
+    """Attach the run-provenance manifest to every BENCH_*.json artifact."""
+    from repro.obs import run_manifest
+
+    manifest = run_manifest()
+    for path in sorted(out_dir.glob("BENCH_*.json")):
+        doc = json.loads(path.read_text())
+        doc["manifest"] = manifest
+        path.write_text(json.dumps(doc, indent=2))
 
 
 def main(argv=None) -> int:
@@ -136,6 +161,7 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     for name in names:
         BENCHES[name](args.out)
+    stamp_manifests(args.out)
     return 0
 
 

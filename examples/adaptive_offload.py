@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import EdgeSpec, NetworkPath, Scenario, ServiceModel, Tier, Workload
 from repro.models import lm
+from repro.obs import AuditLog, MetricsRegistry, format_decision
 from repro.serving.engine import Engine, ServeConfig
 from repro.serving.gateway import OffloadGateway
 from repro.serving.workload import PoissonWorkload, WorkloadConfig
@@ -64,7 +65,13 @@ scn = Scenario(
     allow_unstable=True,
     name="lm-serving",
 )
-gw = OffloadGateway.from_scenario(scn, epoch_s=1.0)
+# observability: every decision below is audited (full closed-form term
+# decomposition) and counted; the printed lines are rendered FROM the audit
+# rows, so console output and the machine-readable trail cannot disagree
+auditor = AuditLog()
+metrics = MetricsRegistry()
+gw = OffloadGateway.from_scenario(scn, epoch_s=1.0, auditor=auditor,
+                                  metrics=metrics)
 
 print("\n--- Fig. 6 replay: bandwidth 20 -> 10 -> 2 -> 20 Mbps ---")
 for t, mbps in [(0, 20), (20, 10), (40, 2), (60, 20)]:
@@ -72,9 +79,8 @@ for t, mbps in [(0, 20), (20, 10), (40, 2), (60, 20)]:
         gw.observe_bandwidth(mbps * 1e6 / 8)
     for dt in np.arange(0.0, 1.0, 0.1):
         gw.observe_arrival(t + dt)
-    d = gw.decide(now=t + 1.0)
-    print(f"t={t:3d}s  {mbps:2d} Mbps -> {d.target_name:12s} "
-          f"(pred {d.predicted_latency_s*1e3:6.1f} ms; device {d.t_dev*1e3:6.1f} ms)")
+    gw.decide(now=t + 1.0)
+    print(format_decision(auditor.rows[-1]))
 
 print("\n--- Fig. 7 replay: edge load surge ---")
 # background load expressed as a fraction of each pod's M/M/4 capacity (the
@@ -92,8 +98,10 @@ for t, (f_a, f_b) in [(80, (0.10, 0.60)), (160, (0.95, 0.60)), (240, (0.98, 0.97
         gw.observe_bandwidth(20e6 / 8)
     for dt in np.arange(0.0, 1.0, 0.1):
         gw.observe_arrival(t + dt)
-    d = gw.decide(now=t + 1.0)
-    print(f"t={t:3d}s  edge loads ({lam_a},{lam_b}) rps -> {d.target_name:12s} "
-          f"(pred {d.predicted_latency_s*1e3:6.1f} ms)")
+    gw.decide(now=t + 1.0)
+    print(f"edge loads ({lam_a},{lam_b}) rps | {format_decision(auditor.rows[-1])}")
 
+auditor.verify()  # audited terms must re-sum to the decision totals
 print(f"\nstrategy switches: {gw.switches}; redispatches: {gw.redispatches}")
+for line in metrics.render().splitlines():
+    print(f"[metrics] {line}")

@@ -138,6 +138,9 @@ class AdaptiveOffloadManager:
         slo_quantile: float | None = None,
         tail_method: str = "euler",
         return_results: bool = True,
+        auditor=None,
+        tracer=None,
+        audit_source: str = "manager",
     ):
         if hysteresis < 0:
             raise ValueError("hysteresis must be >= 0")
@@ -164,6 +167,12 @@ class AdaptiveOffloadManager:
         # delay — must match the Scenario/analytic() setting or the argmin
         # disagrees with the closed forms on the same spec
         self.return_results = return_results
+        # observability (repro.obs) — both duck-typed so core never imports
+        # obs: `auditor` needs .record(**row), `tracer` needs .instant(...).
+        # None keeps the decision path allocation-free.
+        self.auditor = auditor
+        self.tracer = tracer
+        self.audit_source = audit_source
         self._epoch = 0
         self._last: Decision | None = None
         self.history: list[Decision] = []
@@ -174,10 +183,11 @@ class AdaptiveOffloadManager:
         return proc_station(lam_dev, self._MODEL_KINDS[d.service_model],
                             d.service_time_s, d.service_var, d.parallelism_k)
 
-    def _predict_device(self, lam_dev: float) -> float:
-        if self.slo_quantile is not None:
-            return float(sojourn_quantile((self._device_station(lam_dev),),
-                                          self.slo_quantile, method=self.tail_method))
+    def _device_terms(self, lam_dev: float) -> dict[str, float]:
+        """The mean on-device decomposition, keyed and ordered exactly like
+        ``on_device_latency(..., breakdown=True)`` — the audit layer's term
+        re-sum invariant holds by construction because ``_predict_device``
+        derives its mean prediction from this very dict."""
         # proc_wait dispatches on the device's service model (M/D/1, M/M/1,
         # or M/G/1 with its variance) exactly as the paper's lines 1-2 do —
         # duplicating that dispatch here is how GENERAL was once mis-modeled
@@ -186,12 +196,20 @@ class AdaptiveOffloadManager:
             # deprecated fallback — the SAME variability inflation the edge
             # path gets, so equal-variability specs are treated symmetrically
             w = w * (1.0 + self.tail_z)
-        return w + self.device.service_time_s
+        return {"w_proc_dev": w, "s_dev": self.device.service_time_s}
+
+    def _predict_device(self, lam_dev: float) -> float:
+        if self.slo_quantile is not None:
+            return float(sojourn_quantile((self._device_station(lam_dev),),
+                                          self.slo_quantile, method=self.tail_method))
+        t = self._device_terms(lam_dev)
+        return t["w_proc_dev"] + t["s_dev"]
 
     # -- Algorithm 1 lines 3-6 ------------------------------------------------
-    def _predict_edge(
-        self, edge: EdgeServerState, wl: Workload, lam_dev: float, bandwidth_Bps: float
-    ) -> float:
+    @staticmethod
+    def _edge_bandwidth(edge: EdgeServerState, bandwidth_Bps: float) -> float | None:
+        """Resolve the path bandwidth for this edge (per-edge override wins);
+        None means the link is dead/saturated this epoch."""
         if edge.bandwidth_Bps is not None and edge.bandwidth_Bps <= 0:
             # an explicit per-edge override of 0.0 is a config error, not "unset"
             raise ValueError(
@@ -202,6 +220,52 @@ class AdaptiveOffloadManager:
         if b is None or b <= 0:
             # measured bandwidth can hit 0 during an outage: the link is
             # saturated/dead, so offloading is never preferable this epoch
+            return None
+        return b
+
+    def _edge_terms(
+        self, edge: EdgeServerState, wl: Workload, lam_dev: float, bandwidth_Bps: float
+    ) -> dict[str, float]:
+        """The mean offload decomposition — the same six terms, keys, and
+        order as ``edge_offload_latency(..., breakdown=True)`` (Eq. 1 /
+        Alg. 1 lines 3-6). ``_predict_edge`` sums this dict in mean mode."""
+        b = self._edge_bandwidth(edge, bandwidth_Bps)
+        if b is None:
+            return {"w_net_dev": float(np.inf), "n_req": 0.0,
+                    "w_proc_edge": 0.0, "s_edge": edge.service_time_s,
+                    "w_net_edge": 0.0, "n_res": 0.0}
+        # zero-byte payloads mean "no transfer on this leg" (e.g. results
+        # consumed at the edge) — the NIC queue degenerates to zero delay
+        if wl.req_bytes > 0:
+            # line 3: T_net_req <- M/M/1(lambda_dev, B/D_req) + D_req/B
+            w_net_dev = float(mm1_wait(lam_dev, b / wl.req_bytes))
+            n_req = wl.req_bytes / b
+        else:
+            w_net_dev = n_req = 0.0
+        if self.return_results and wl.res_bytes > 0:
+            # line 4: T_net_res <- M/M/1(lambda_edge,E, B/D_res) + D_res/B
+            w_net_edge = float(mm1_wait(edge.arrival_rate, b / wl.res_bytes))
+            n_res = wl.res_bytes / b
+        else:
+            w_net_edge = n_res = 0.0
+        # line 6: M/G/1 wait on the edge's aggregate mixture
+        w_proc = float(
+            mg1_wait(edge.arrival_rate, edge.service_rate, edge.service_var, edge.parallelism_k)
+        )
+        if self.tail_z > 0.0:
+            # beyond-paper: penalise variability when an SLO is set.
+            # sigma_w proxy: for M/G/1 the wait is roughly exponential-tailed
+            # with scale E[w]; mean + z*E[w] is a cheap upper quantile proxy.
+            w_proc = w_proc * (1.0 + self.tail_z)
+        return {"w_net_dev": w_net_dev, "n_req": n_req,
+                "w_proc_edge": w_proc, "s_edge": edge.service_time_s,
+                "w_net_edge": w_net_edge, "n_res": n_res}
+
+    def _predict_edge(
+        self, edge: EdgeServerState, wl: Workload, lam_dev: float, bandwidth_Bps: float
+    ) -> float:
+        b = self._edge_bandwidth(edge, bandwidth_Bps)
+        if b is None:
             return float(np.inf)
         if self.slo_quantile is not None:
             # SLO mode: score the q-quantile of the composed sojourn
@@ -216,28 +280,12 @@ class AdaptiveOffloadManager:
                                         proc, return_results=self.return_results)
             return float(sojourn_quantile(stations, self.slo_quantile,
                                           method=self.tail_method))
-        # zero-byte payloads mean "no transfer on this leg" (e.g. results
-        # consumed at the edge) — the NIC queue degenerates to zero delay
-        if wl.req_bytes > 0:
-            # line 3: T_net_req <- M/M/1(lambda_dev, B/D_req) + D_req/B
-            t_req = float(mm1_wait(lam_dev, b / wl.req_bytes) + wl.req_bytes / b)
-        else:
-            t_req = 0.0
-        if self.return_results and wl.res_bytes > 0:
-            # line 4: T_net_res <- M/M/1(lambda_edge,E, B/D_res) + D_res/B
-            t_res = float(mm1_wait(edge.arrival_rate, b / wl.res_bytes) + wl.res_bytes / b)
-        else:
-            t_res = 0.0
-        # line 6: T_edge,E <- T_req + M/G/1(lambda_E, mu_E) + s_edge + T_res
-        w_proc = float(
-            mg1_wait(edge.arrival_rate, edge.service_rate, edge.service_var, edge.parallelism_k)
-        )
-        if self.tail_z > 0.0:
-            # beyond-paper: penalise variability when an SLO is set.
-            # sigma_w proxy: for M/G/1 the wait is roughly exponential-tailed
-            # with scale E[w]; mean + z*E[w] is a cheap upper quantile proxy.
-            w_proc = w_proc * (1.0 + self.tail_z)
-        return t_req + w_proc + edge.service_time_s + t_res
+        # line 6: T_edge,E <- T_req + M/G/1(lambda_E, mu_E) + s_edge + T_res —
+        # summed in LatencyBreakdown's key order so the prediction IS the sum
+        # of its own audit terms (bit-exact, not just within tolerance)
+        t = self._edge_terms(edge, wl, lam_dev, bandwidth_Bps)
+        return (t["w_net_dev"] + t["n_req"] + t["w_proc_edge"]
+                + t["s_edge"] + t["w_net_edge"] + t["n_res"])
 
     # -- Algorithm 1 lines 7-11 -----------------------------------------------
     def decide(
@@ -247,6 +295,7 @@ class AdaptiveOffloadManager:
         edges: Sequence[EdgeServerState],
     ) -> Decision:
         lam_dev = snapshot.lam_dev
+        last_index = None if self._last is None else self._last.edge_index
         t_dev = self._predict_device(lam_dev)
         t_edges = tuple(
             self._predict_edge(e, wl, lam_dev, snapshot.bandwidth_Bps) for e in edges
@@ -254,7 +303,7 @@ class AdaptiveOffloadManager:
         choice, predicted = apply_decision_rule(
             t_dev,
             t_edges,
-            last_index=None if self._last is None else self._last.edge_index,
+            last_index=last_index,
             hysteresis=self.hysteresis,
         )
 
@@ -266,10 +315,79 @@ class AdaptiveOffloadManager:
             t_edges=t_edges,
             epoch=self._epoch,
         )
+        if self.auditor is not None:
+            self._audit(decision, wl, snapshot, edges, last_index)
+        if self.tracer is not None:
+            self.tracer.instant(
+                t=snapshot.time_s, name="decide", cat="decide",
+                track=self.audit_source, epoch=decision.epoch,
+                target=decision.target_name,
+                predicted_latency_s=decision.predicted_latency_s,
+            )
         self._epoch += 1
         self._last = decision
         self.history.append(decision)
         return decision
+
+    def _audit(self, decision, wl, snapshot, edges, last_index) -> None:
+        """Record the full closed-form story behind ``decision`` (repro.obs).
+
+        In mean mode the audited totals ARE the ordered sums of the audited
+        terms (the predictions are computed that way); in SLO-quantile mode
+        the totals are q-quantiles, so the mean decomposition is logged
+        alongside under ``term_totals`` and ``decision_metric`` says which
+        metric the argmin ranked.
+        """
+        terms: dict[str, dict[str, float]] = {
+            "on_device": self._device_terms(snapshot.lam_dev)}
+        for i, e in enumerate(edges):
+            terms[f"edge[{i}]"] = self._edge_terms(
+                e, wl, snapshot.lam_dev, snapshot.bandwidth_Bps)
+        term_totals = {
+            "on_device": terms["on_device"]["w_proc_dev"] + terms["on_device"]["s_dev"]}
+        for i in range(len(edges)):
+            t = terms[f"edge[{i}]"]
+            term_totals[f"edge[{i}]"] = (
+                t["w_net_dev"] + t["n_req"] + t["w_proc_edge"]
+                + t["s_edge"] + t["w_net_edge"] + t["n_res"])
+        totals = {"on_device": decision.t_dev}
+        for i, v in enumerate(decision.t_edges):
+            totals[f"edge[{i}]"] = v
+        alts = [v for k, v in totals.items() if k != decision.target_name]
+        chosen_total = totals[decision.target_name]
+        margin = min(alts) - chosen_total if alts else float(np.inf)
+        if np.isnan(margin):  # inf - inf: everything saturated, no margin story
+            margin = 0.0
+        # hysteresis engaged <=> the no-hysteresis rule picks differently
+        raw_choice, _ = apply_decision_rule(decision.t_dev, decision.t_edges)
+        self.auditor.record(
+            epoch=decision.epoch,
+            time_s=snapshot.time_s,
+            source=self.audit_source,
+            chosen=decision.target_name,
+            edge_index=decision.edge_index,
+            predicted_latency_s=decision.predicted_latency_s,
+            decision_metric=("mean" if self.slo_quantile is None
+                             else f"p{self.slo_quantile * 100:g}"),
+            totals=totals,
+            terms=terms,
+            term_totals=term_totals,
+            snapshot={
+                "time_s": snapshot.time_s,
+                "lam_dev": snapshot.lam_dev,
+                "bandwidth_Bps": snapshot.bandwidth_Bps,
+                "edge_arrival_rates": [e.arrival_rate for e in edges],
+                "edge_service_rates": [e.service_rate for e in edges],
+                "edge_service_vars": [e.service_var for e in edges],
+            },
+            margin_s=float(margin),
+            hysteresis={
+                "hysteresis": self.hysteresis,
+                "last_index": last_index,
+                "engaged": raw_choice != decision.edge_index,
+            },
+            slo_quantile=self.slo_quantile,
+        )
 
     # -- shared epoch entry point ----------------------------------------------
     def step(self, t: float, metrics: Mapping) -> Decision:

@@ -37,19 +37,28 @@ class SlidingRateEstimator:
         self._times: deque[float] = deque()
 
     def record(self, t: float) -> None:
+        t = float(t)
+        if not np.isfinite(t):
+            # a NaN/inf timestamp would poison every eviction comparison from
+            # here on (NaN compares false, so nothing ever evicts) — reject
+            # at the boundary instead of propagating a silently-wrong rate
+            raise ValueError(f"timestamp must be finite, got {t!r}")
         if self._times and t < self._times[-1]:
             raise ValueError("timestamps must be non-decreasing")
         self._times.append(t)
         self._evict(t)
 
     def _evict(self, now: float) -> None:
+        # strict <: an event exactly window_s old is still IN the window
         while self._times and self._times[0] < now - self.window_s:
             self._times.popleft()
 
     def rate(self, now: float | None = None) -> float:
         if not self._times:
             return 0.0
-        now = self._times[-1] if now is None else now
+        now = self._times[-1] if now is None else float(now)
+        if not np.isfinite(now):
+            raise ValueError(f"now must be finite, got {now!r}")
         self._evict(now)
         if not self._times:
             return 0.0
@@ -62,10 +71,18 @@ class EwmaEstimator:
     def __init__(self, alpha: float = 0.3, initial: float | None = None):
         if not 0 < alpha <= 1:
             raise ValueError("alpha in (0, 1]")
+        if initial is not None and not np.isfinite(initial):
+            raise ValueError(f"initial must be finite, got {initial!r}")
         self.alpha = alpha
         self._value = initial
 
     def update(self, x: float) -> float:
+        x = float(x)
+        if not np.isfinite(x):
+            # one NaN observation would stick in the average forever (every
+            # later blend stays NaN); an inf decays but lingers for many
+            # epochs — a corrupted probe reading must fail at ingest
+            raise ValueError(f"observation must be finite, got {x!r}")
         self._value = x if self._value is None else self.alpha * x + (1 - self.alpha) * self._value
         return self._value
 
@@ -87,6 +104,11 @@ class WindowedMoments:
         self._buf: deque[float] = deque(maxlen=maxlen)
 
     def record(self, x: float) -> None:
+        x = float(x)
+        if not np.isfinite(x):
+            # a single NaN/inf makes mean AND var non-finite for the next
+            # maxlen observations — reject loudly at the boundary
+            raise ValueError(f"observation must be finite, got {x!r}")
         self._buf.append(x)
 
     @property
@@ -96,11 +118,15 @@ class WindowedMoments:
     @property
     def mean(self) -> float:
         if not self._buf:
-            raise RuntimeError("no observations yet")
+            raise RuntimeError(
+                "WindowedMoments.mean on an empty window — record() at least "
+                "one observation (or check .count) before reading the mean")
         return float(np.mean(self._buf))
 
     @property
     def var(self) -> float:
+        # one sample has no spread information: report 0.0 (a deterministic
+        # M/G/1 prior) rather than the NaN ddof=1 would produce
         if len(self._buf) < 2:
             return 0.0
         return float(np.var(self._buf, ddof=1))

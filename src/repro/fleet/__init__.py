@@ -36,6 +36,7 @@ from .cluster import (
     cross_check_equilibrium,
     induced_scenario,
     predict_decisions,
+    predict_terms,
     simulate_cluster,
     solve_equilibrium,
 )

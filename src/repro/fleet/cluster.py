@@ -84,6 +84,7 @@ __all__ = [
     "induced_scenario",
     "cross_check_equilibrium",
     "predict_decisions",
+    "predict_terms",
 ]
 
 
@@ -150,14 +151,16 @@ def _bg_moments(cst, endo, exo):
     return bg_lam, bg_wsum, bg_ssum
 
 
-def _predict_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum):
-    """(N,) t_dev and (N, E) t_edge exactly as ``AdaptiveOffloadManager.step``
-    computes them from the same estimates (Alg. 1 lines 1-6): the device via
-    its service-model dispatch, each edge as M/G/1 on the aggregate mixture
-    (own stream folded in) with the OWN service time on line 6."""
-    t_dev = _proc_wait_vec(
-        cst["dev_model"], lam_hat, cst["dev_s"], cst["dev_var"], cst["dev_k"]
-    ) + cst["dev_s"]
+def _predict_terms_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum):
+    """The per-term decomposition behind :func:`_predict_vec`, keyed exactly
+    like ``LatencyBreakdown`` (w_proc_dev/s_dev; w_net_dev/n_req/w_proc_edge/
+    s_edge/w_net_edge/n_res) — device terms (N,), edge terms (N, E). The
+    totals are DERIVED from these by ordered summation, so the cluster's
+    decision audits re-sum bit-exactly by construction."""
+    shape = jnp.broadcast_shapes(lam_hat.shape + (1,), bg_lam.shape)
+    w_proc_dev = _proc_wait_vec(
+        cst["dev_model"], lam_hat, cst["dev_s"], cst["dev_var"], cst["dev_k"])
+    s_dev = jnp.broadcast_to(cst["dev_s"], lam_hat.shape)
 
     own_var = _implied_var_vec(cst["edge_model"], cst["edge_s"], cst["edge_var"])
     lam = lam_hat[:, None]
@@ -165,18 +168,45 @@ def _predict_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum):
     mean_mix = (lam * cst["edge_s"] + bg_wsum) / lam_tot
     second = (lam * (own_var + cst["edge_s"] ** 2) + bg_ssum) / lam_tot
     var_mix = jnp.maximum(0.0, second - mean_mix**2)
-    w_proc = mg1_wait_vec(lam_tot, 1.0 / mean_mix, var_mix, cst["edge_k"])
+    w_proc_edge = jnp.broadcast_to(
+        mg1_wait_vec(lam_tot, 1.0 / mean_mix, var_mix, cst["edge_k"]), shape)
 
     b = jnp.where(jnp.isnan(cst["edge_bw"]), bw_hat[:, None], cst["edge_bw"])
-    t_req = mm1_wait_vec(lam, b / cst["req_bytes"]) + cst["req_bytes"] / b
+    w_net_dev = jnp.broadcast_to(
+        mm1_wait_vec(lam, b / cst["req_bytes"]), shape)
+    n_req = jnp.broadcast_to(cst["req_bytes"] / b, shape)
     use_res = cst["return_results"] & (cst["res_bytes"] > 0)
-    t_res = jnp.where(
-        use_res,
-        mm1_wait_vec(lam_tot, b / cst["res_bytes"]) + cst["res_bytes"] / b,
-        0.0,
-    )
-    t_edge = t_req + w_proc + cst["edge_s"] + t_res
+    w_net_edge = jnp.where(
+        use_res, mm1_wait_vec(lam_tot, b / cst["res_bytes"]), 0.0)
+    n_res = jnp.where(use_res, jnp.broadcast_to(cst["res_bytes"] / b, shape), 0.0)
+    return {
+        "w_proc_dev": w_proc_dev,
+        "s_dev": s_dev,
+        "w_net_dev": w_net_dev,
+        "n_req": n_req,
+        "w_proc_edge": w_proc_edge,
+        "s_edge": jnp.broadcast_to(cst["edge_s"], shape),
+        "w_net_edge": w_net_edge,
+        "n_res": n_res,
+    }
+
+
+def _sum_terms(terms):
+    """(t_dev, t_edge) from the term dict — LatencyBreakdown's exact
+    summation order (matches the scalar manager's ordered sum)."""
+    t_dev = terms["w_proc_dev"] + terms["s_dev"]
+    t_edge = (terms["w_net_dev"] + terms["n_req"] + terms["w_proc_edge"]
+              + terms["s_edge"] + terms["w_net_edge"] + terms["n_res"])
     return t_dev, t_edge
+
+
+def _predict_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum):
+    """(N,) t_dev and (N, E) t_edge exactly as ``AdaptiveOffloadManager.step``
+    computes them from the same estimates (Alg. 1 lines 1-6): the device via
+    its service-model dispatch, each edge as M/G/1 on the aggregate mixture
+    (own stream folded in) with the OWN service time on line 6."""
+    return _sum_terms(
+        _predict_terms_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum))
 
 
 def _predict_tail_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum, q,
@@ -300,6 +330,48 @@ def predict_decisions(
             use_h = jnp.bool_(True)
         choice = _decide_vec(t_dev, t_edge, prev, jnp.float64(hysteresis), use_h)
         return np.asarray(choice), np.asarray(t_dev), np.asarray(t_edge)
+
+
+def predict_terms(
+    spec: ClusterSpec,
+    lam_hat,
+    bandwidth_hat,
+    endo_hat,
+    exo_hat,
+) -> dict[str, np.ndarray]:
+    """The per-term decomposition behind one epoch of (mean-mode) cluster
+    decisions — ``predict_decisions``' totals, shown working.
+
+    Same estimate inputs and fallback semantics as :func:`predict_decisions`.
+    Returns LatencyBreakdown-keyed arrays — device terms ``w_proc_dev``/
+    ``s_dev`` (N,), edge terms ``w_net_dev``/``n_req``/``w_proc_edge``/
+    ``s_edge``/``w_net_edge``/``n_res`` (N, E) — plus their ordered sums
+    ``t_dev`` (N,) and ``t_edge`` (N, E), which match ``predict_decisions``
+    bit-for-bit on identical inputs (both are ``_sum_terms`` over
+    ``_predict_terms_vec``). This is what ``repro.obs.audit.audit_cluster``
+    reconstructs closed-loop decision audits from.
+    """
+    cst = _spec_arrays(spec)
+    with jax.experimental.enable_x64():
+        c = _as_jnp(cst)
+        lam_hat = jnp.atleast_1d(jnp.asarray(lam_hat, dtype=jnp.float64))
+        if lam_hat.shape[0] != spec.n_clients:
+            raise ScenarioError(
+                "n_clients", f"expected {spec.n_clients} per-client estimates, "
+                f"got {lam_hat.shape[0]}")
+        lam_hat = jnp.where(lam_hat > 0, lam_hat, c["lam_spec"])
+        bw_hat = jnp.broadcast_to(
+            jnp.asarray(bandwidth_hat, dtype=jnp.float64), lam_hat.shape)
+        endo = jnp.asarray(endo_hat, dtype=jnp.float64).reshape(
+            lam_hat.shape[0], spec.n_edges)
+        exo = jnp.asarray(exo_hat, dtype=jnp.float64).reshape(spec.n_edges)
+        bg_lam, bg_wsum, bg_ssum = _bg_moments(c, endo, exo[None, :])
+        terms = _predict_terms_vec(c, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum)
+        t_dev, t_edge = _sum_terms(terms)
+        out = {k: np.asarray(v) for k, v in terms.items()}
+        out["t_dev"] = np.asarray(t_dev)
+        out["t_edge"] = np.asarray(t_edge)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -543,6 +615,7 @@ def simulate_cluster(
     stagger: int = 1,
     slo_quantile: float | None = None,
     tail_method: str = "asymptote",
+    tracer=None,
 ) -> ClusterResult:
     """Drive N clients through the trace batch with the loop closed.
 
@@ -619,6 +692,18 @@ def simulate_cluster(
             lat, saturated = clamp_saturation(lat, saturation_penalty_s)
             results["adaptive"] = ClusterPolicyResult(
                 "adaptive", lat, choices, loads, saturated)
+            if tracer is not None:
+                # per-epoch fleet-aggregate decide spans (the scan itself is
+                # jitted — spans are reconstructed from its outputs, stamped
+                # on the trace clock)
+                dt = float(traces.epoch_s)
+                for t in range(t_n):
+                    offloaded = int(np.sum(choices[t] >= 0))
+                    tracer.span(
+                        t=t * dt, dur=dt, name="decide", cat="decide",
+                        track="cluster", epoch=t, offloaded=offloaded,
+                        on_device=int(choices.shape[1] - offloaded),
+                        mean_latency_s=float(np.mean(lat[t])))
 
         for name, tgt in static_targets.items():
             choices = np.full((t_n, spec.n_clients), tgt, dtype=np.int32)

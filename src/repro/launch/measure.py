@@ -31,6 +31,7 @@ from repro.measure import (
     load_profile,
     run_harness,
 )
+from repro.obs import run_manifest
 from repro.validate.measured import (
     DEFAULT_MEASURED_BUDGET_PCT,
     DEFAULT_MEASURED_TAIL_BUDGET_PCT,
@@ -156,7 +157,9 @@ def main(argv=None) -> int:
         if args.trace_out is not None:
             trace.save(args.trace_out)
             print(f"wrote {args.trace_out}")
-        profile = build_profile(trace, seed=args.seed)
+        profile = build_profile(trace, seed=args.seed,
+                                manifest=run_manifest(seed=hc.seed,
+                                                      config=hc.to_dict()))
         out = args.out or Path(f"PROFILE_{profile.arch}.json")
         profile.save(out)
         _print_profile(profile)
@@ -165,7 +168,9 @@ def main(argv=None) -> int:
 
     if args.cmd == "fit":
         trace = MeasuredTrace.load(args.trace)
-        profile = build_profile(trace, seed=args.seed)
+        profile = build_profile(trace, seed=args.seed,
+                                manifest=run_manifest(seed=trace.harness.seed,
+                                                      config=trace.harness.to_dict()))
         out = args.out or Path(f"PROFILE_{profile.arch}.json")
         profile.save(out)
         _print_profile(profile)
@@ -176,16 +181,25 @@ def main(argv=None) -> int:
     if args.profile is not None:
         profile = load_profile(args.profile)
     else:
-        trace = run_harness(_harness_config(args))
-        profile = build_profile(trace, seed=args.seed)
+        hc = _harness_config(args)
+        trace = run_harness(hc)
+        profile = build_profile(trace, seed=args.seed,
+                                manifest=run_manifest(seed=hc.seed,
+                                                      config=hc.to_dict()))
         if args.out is not None:
             profile.save(args.out)
             print(f"wrote {args.out}")
     rep = run_measured_gate(profile, occupancy=args.occupancy,
                             budget_pct=args.budget,
                             tail_budget_pct=args.tail_budget)
+    d = rep.to_dict()
+    # run provenance rides along with every gate report: the profile's own
+    # manifest when it has one (a loaded artifact keeps its origin), else
+    # this process's
+    d["manifest"] = dict(profile.manifest) if profile.manifest is not None \
+        else run_manifest(seed=args.seed)
     args.report_out.parent.mkdir(parents=True, exist_ok=True)
-    args.report_out.write_text(json.dumps(rep.to_dict(), indent=2) + "\n")
+    args.report_out.write_text(json.dumps(d, indent=2) + "\n")
     _print_gate(rep)
     print(f"wrote {args.report_out} in {time.perf_counter() - t0:.1f}s")
     return 0 if rep.passed else 1

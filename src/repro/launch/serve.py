@@ -19,6 +19,7 @@ import numpy as np
 from repro.configs.base import ARCH_IDS, get_config
 from repro.core.latency import ServiceModel, Tier, Workload
 from repro.models import lm
+from repro.obs import AuditLog, MetricsRegistry, format_decision
 from repro.serving.engine import Engine, ServeConfig
 from repro.serving.gateway import EdgeHandle, OffloadGateway
 from repro.serving.workload import PoissonWorkload, WorkloadConfig
@@ -60,21 +61,29 @@ def main(argv=None) -> int:
     # payloads scaled to the profiled service: the schedule's bandwidth
     # crossover lands near 5 Mbps regardless of machine speed
     req_bytes = max(1, int(0.8 * s_dev * 0.625e6))
+    # every per-epoch line below is rendered FROM the audit log, so the
+    # console report and the machine-readable trail cannot disagree
+    auditor = AuditLog()
+    metrics = MetricsRegistry()
     gw = OffloadGateway(
         dev,
         [EdgeHandle("edge0", service_mean_s=s_dev / 8, parallelism_k=4.0)],
         Workload(args.rps, req_bytes, max(1, req_bytes // 5)),
         bandwidth_Bps=2.5e6,
+        auditor=auditor,
+        metrics=metrics,
     )
     for i, mbps in enumerate(float(x) for x in args.schedule.split(",")):
         for _ in range(3):
             gw.observe_bandwidth(mbps * 1e6 / 8)
         for dt in np.arange(0.0, 1.0, 1.0 / max(args.rps, 1.0)):
             gw.observe_arrival(i + dt)
-        d = gw.decide(now=i + 1.0)
-        print(f"[gateway] epoch {i}: {mbps:5.1f} Mbps -> {d.target_name:10s} "
-              f"(pred {d.predicted_latency_s*1e3:7.1f} ms)")
+        gw.decide(now=i + 1.0)
+        print(format_decision(auditor.rows[-1]))
+    auditor.verify()  # terms must re-sum to the decision totals
     print(f"[gateway] switches={gw.switches}")
+    for line in metrics.render().splitlines():
+        print(f"[metrics] {line}")
     return 0
 
 

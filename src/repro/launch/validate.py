@@ -21,6 +21,7 @@ import json
 import time
 from pathlib import Path
 
+from repro.obs import run_manifest
 from repro.validate import (
     DEFAULT_MAPE_BUDGET_PCT,
     DEFAULT_SEED,
@@ -147,6 +148,11 @@ def main(argv=None) -> int:
     d = rep.to_dict()
     d["corpus"] = {"path": meta.get("path"), "seed": meta.get("seed"),
                    "smoke": args.smoke, "elapsed_s": elapsed}
+    d["manifest"] = run_manifest(seed=args.seed, config={
+        "smoke": args.smoke, "base_n": base_n, "max_n_factor": max_factor,
+        "budget_pct": args.budget, "tail_pct": args.tail_pct,
+        "tail_budget_pct": args.tail_budget,
+    })
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(d, indent=2))
     _print_report(rep, elapsed)

@@ -298,7 +298,7 @@ def _request_records(reqs, events) -> list[RequestRecord]:
     return out
 
 
-def run_harness(hc: HarnessConfig) -> MeasuredTrace:
+def run_harness(hc: HarnessConfig, *, tracer=None) -> MeasuredTrace:
     """Run one profiling experiment end to end and return its trace.
 
     Event loop: arrivals with ``arrival_s <= t`` are submitted, the engine
@@ -306,6 +306,12 @@ def run_harness(hc: HarnessConfig) -> MeasuredTrace:
     tick consumed (the engine serialises its ops, so elapsed time is exactly
     the sum of the tick's event durations). When the system empties, ``t``
     jumps to the next arrival — idle time costs nothing.
+
+    ``tracer`` (a ``repro.obs.Tracer``) records the queue/prefill/decode/
+    respond lifecycle of every request on the harness clock — with the
+    simulated clock the emitted span stream is byte-stable per seed, exactly
+    like the trace artifact itself. Calibration probes are excluded (the
+    tracer is attached after calibration, mirroring service_log.clear()).
     """
     import jax
 
@@ -340,6 +346,9 @@ def run_harness(hc: HarnessConfig) -> MeasuredTrace:
 
     lam = _resolve_arrival_rate(hc, eng, timer, probe_request)
     eng.service_log.clear()  # drop any calibration events
+    if tracer is not None:
+        eng.tracer = tracer
+        eng._trace = getattr(tracer, "enabled", True)
 
     wc = WorkloadConfig(
         arrival_rate=lam,

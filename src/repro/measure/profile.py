@@ -45,6 +45,7 @@ class MeasuredProfile:
     fits: tuple[DistFit, ...]
     observed: tuple[tuple[str, float], ...]  # end-to-end latency stats (sorted keys)
     workload: tuple[tuple[str, float], ...]  # workload shape summary (sorted keys)
+    manifest: Mapping | None = None  # run provenance (repro.obs.run_manifest)
     version: int = PROFILE_VERSION
 
     # -- lookups -------------------------------------------------------------
@@ -80,7 +81,7 @@ class MeasuredProfile:
 
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> dict:
-        return {
+        d = {
             "version": self.version,
             "arch": self.arch,
             "clock": self.clock,
@@ -92,6 +93,9 @@ class MeasuredProfile:
             "observed": {k: v for k, v in self.observed},
             "fits": [f.to_dict() for f in self.fits],
         }
+        if self.manifest is not None:
+            d["manifest"] = dict(self.manifest)
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "MeasuredProfile":
@@ -112,6 +116,7 @@ class MeasuredProfile:
                 (str(k), float(v)) for k, v in d.get("observed", {}).items())),
             workload=tuple(sorted(
                 (str(k), float(v)) for k, v in d.get("workload", {}).items())),
+            manifest=d.get("manifest"),
             version=version,
         )
 
@@ -131,13 +136,15 @@ def load_profile(path: str | Path) -> MeasuredProfile:
 
 
 def build_profile(trace: MeasuredTrace, *, seed: int = 0,
-                  min_group: int = 8) -> MeasuredProfile:
+                  min_group: int = 8, manifest: Mapping | None = None) -> MeasuredProfile:
     """Fit a trace and package it as a :class:`MeasuredProfile`.
 
     The observed block records what the engine actually delivered end to
     end (mean/percentile latency, queue wait, a block-bootstrap CI on the
     mean) — the ground truth the measured validation gate compares the
-    closed forms against.
+    closed forms against. ``manifest`` (``repro.obs.run_manifest``) stamps
+    the run's provenance into the artifact; it is timestamp-free, so the
+    profile stays byte-stable per seed.
     """
     hc = trace.harness
     lat = trace.latencies()
@@ -173,4 +180,5 @@ def build_profile(trace: MeasuredTrace, *, seed: int = 0,
         fits=tuple(fit_trace(trace, seed=seed, min_group=min_group)),
         observed=tuple(sorted(observed.items())),
         workload=tuple(sorted(workload.items())),
+        manifest=manifest,
     )

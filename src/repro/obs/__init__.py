@@ -1,0 +1,34 @@
+"""repro.obs — observability: tracing, decision audits, metrics, provenance.
+
+  * :mod:`repro.obs.tracer` — deterministic span tracer (JSONL + Perfetto)
+  * :mod:`repro.obs.audit` — explainable decision audits with the term
+    re-sum invariant
+  * :mod:`repro.obs.metrics` — counters / gauges / streaming histograms
+  * :mod:`repro.obs.manifest` — timestamp-free run provenance manifests
+  * :mod:`repro.obs.report` — markdown/terminal rendering of all of the above
+"""
+
+from .audit import AuditLog, DecisionAudit, ResumError, audit_cluster
+from .manifest import manifest_delta, run_manifest
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .report import explain_flip, format_decision, render_report
+from .tracer import Span, Tracer, merge
+
+__all__ = [
+    "AuditLog",
+    "DecisionAudit",
+    "ResumError",
+    "audit_cluster",
+    "run_manifest",
+    "manifest_delta",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "Tracer",
+    "merge",
+    "format_decision",
+    "explain_flip",
+    "render_report",
+]

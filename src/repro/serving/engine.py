@@ -101,11 +101,16 @@ class Engine:
     """
 
     def __init__(self, cfg: ModelConfig, params: Any, sc: ServeConfig,
-                 timer: Timer | None = None):
+                 timer: Timer | None = None, tracer=None):
         self.cfg = cfg
         self.sc = sc
         self.params = params
         self.timer = timer
+        # repro.obs request tracing (duck-typed; serving never imports obs).
+        # _trace is the single predicate every hot-path emission site checks:
+        # tracer=None and Tracer(enabled=False) cost exactly one bool test.
+        self.tracer = tracer
+        self._trace = tracer is not None and getattr(tracer, "enabled", True)
         self._decode = jax.jit(
             lambda p, tok, pos, caches: lm.decode_step(p, cfg, tok, pos, caches)
         )
@@ -205,11 +210,24 @@ class Engine:
             req.t_first_token = now + dt
             self.service_log.append(
                 ServiceEvent(now, "prefill", dt, 1, req.rid, L, cold))
+            if self._trace:
+                track = f"req[{req.rid}]"
+                self.tracer.span(
+                    t=req.arrival_s, dur=max(0.0, now - req.arrival_s),
+                    name="queue", cat="queue", track=track, rid=req.rid)
+                self.tracer.span(
+                    t=now, dur=dt, name="prefill", cat="prefill", track=track,
+                    rid=req.rid, tokens=L, compile=cold)
             now += dt
             if self.remaining[slot] <= 0:
                 # single-token request: prefill IS the whole service
                 req.t_done = req.t_first_token
                 self.completed.append(req)
+                if self._trace:
+                    self.tracer.instant(
+                        t=req.t_done, name="respond", cat="respond",
+                        track=f"req[{req.rid}]", rid=req.rid,
+                        tokens=len(req.tokens_out), latency_s=req.latency_s)
             else:
                 self.active[slot] = req
         return now
@@ -265,8 +283,17 @@ class Engine:
                 req.t_done = now + dt
                 self.completed.append(req)
                 self.active[slot] = None
+                if self._trace:
+                    self.tracer.instant(
+                        t=req.t_done, name="respond", cat="respond",
+                        track=f"req[{req.rid}]", rid=req.rid,
+                        tokens=len(req.tokens_out), latency_s=req.latency_s)
         self.service_log.append(
             ServiceEvent(now, "decode", dt, n_active, -1, n_active, cold))
+        if self._trace:
+            self.tracer.span(
+                t=now, dur=dt, name="decode", cat="decode", track="engine",
+                occupancy=n_active, compile=cold)
         return n_active
 
     def drain(self) -> None:

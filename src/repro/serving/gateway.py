@@ -151,13 +151,22 @@ class OffloadGateway:
         hysteresis: float = 0.0,
         return_results: bool = True,
         deadline_timeout: Callable[[float], float] | None = None,
+        auditor=None,
+        tracer=None,
+        metrics=None,
     ):
         self.device = device_tier
         self.edges = list(edges)
         self.wl = wl
         self.epoch_s = epoch_s
+        # observability (repro.obs, all duck-typed): the manager records the
+        # decision audit + decide span; the gateway adds the modelled transfer
+        # span and feeds the metrics registry
+        self.tracer = tracer
+        self.metrics = metrics
         self.manager = AdaptiveOffloadManager(
-            device_tier, hysteresis=hysteresis, return_results=return_results
+            device_tier, hysteresis=hysteresis, return_results=return_results,
+            auditor=auditor, tracer=tracer, audit_source="gateway",
         )
         self.bandwidth = EwmaEstimator(alpha=0.5, initial=bandwidth_Bps)
         self.arrivals = SlidingRateEstimator(window_s=30.0)
@@ -202,6 +211,34 @@ class OffloadGateway:
             },
         )
         self.decisions.append(d)
+        if self.tracer is not None and d.edge_index != ON_DEVICE:
+            # the modelled transfer this decision commits the epoch's
+            # requests to: request leg out now, response leg back after the
+            # edge's service (mean-model stamps, same clock as the decision)
+            edge = self.edges[d.edge_index]
+            b = edge.bandwidth_Bps if edge.bandwidth_Bps is not None \
+                else self.bandwidth.value
+            if b > 0:
+                track = f"edge[{d.edge_index}]"
+                t_req = self.wl.req_bytes / b
+                self.tracer.span(
+                    t=now, dur=t_req, name="transfer:request", cat="transfer",
+                    track=track, bytes=self.wl.req_bytes, bandwidth_Bps=b)
+                if self.manager.return_results and self.wl.res_bytes > 0:
+                    self.tracer.span(
+                        t=now + t_req + edge.service_mean_s,
+                        dur=self.wl.res_bytes / b, name="transfer:response",
+                        cat="transfer", track=track, bytes=self.wl.res_bytes,
+                        bandwidth_Bps=b)
+        if self.metrics is not None:
+            self.metrics.counter("gateway.decisions").inc()
+            if d.edge_index != ON_DEVICE:
+                self.metrics.counter("gateway.offloaded_epochs").inc()
+            self.metrics.gauge("gateway.bandwidth_Bps").set(self.bandwidth.value)
+            self.metrics.gauge("gateway.arrival_rate").set(lam)
+            if np.isfinite(d.predicted_latency_s):
+                self.metrics.histogram(
+                    "gateway.predicted_latency_s").record(d.predicted_latency_s)
         return d
 
     # -- straggler mitigation -------------------------------------------------
