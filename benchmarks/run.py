@@ -17,6 +17,8 @@ JSON artifact under ``--out``:
                          requests/s, fit wall time, measured-gate MAPE)
   * ``obs``           -> BENCH_obs.json (tracer-disabled overhead gate,
                          enabled-tracer tokens/s, audit rows/s + re-sum gate)
+  * ``plan``          -> BENCH_plan.json (provisioning-solver wall time,
+                         equilibrium solves vs grid size, plan picked)
   * ``roofline``      -> CSV rows from dry-run artifacts, when present
 
 Every BENCH_*.json written by a run gets a ``manifest`` block stamped in
@@ -103,6 +105,12 @@ def run_obs(out_dir: Path) -> dict:
     return obs_rows(out_dir)
 
 
+def run_plan(out_dir: Path) -> dict:
+    from .plan_bench import plan_rows
+
+    return plan_rows(out_dir)
+
+
 def run_roofline(out_dir: Path) -> dict:
     # roofline table from dry-run artifacts, if present
     roof = Path("experiments/roofline")
@@ -122,6 +130,7 @@ BENCHES = {
     "tail": run_tail,
     "measure": run_measure,
     "obs": run_obs,
+    "plan": run_plan,
     "roofline": run_roofline,
 }
 

@@ -62,8 +62,26 @@ def tail_rows(out_dir: Path | None = None) -> dict:
     _, us_asym = timed(fleet_tail, batch, Q, method="asymptote")
     euler_rps = rows / (us_euler / 1e6)
     asym_rps = rows / (us_asym / 1e6)
+    slowdown = asym_rps / euler_rps
     emit("tail_vec_euler", us_euler, f"{euler_rps:.0f}_rows_per_s")
     emit("tail_vec_asymptote", us_asym, f"{asym_rps:.0f}_rows_per_s")
+    emit("tail_euler_vs_asym_slowdown", 0.0, f"{slowdown:.2f}x_acceptance_le_10x")
+
+    # -- batched exact euler vs scalar euler over the corpus ------------------
+    # the differential harness gates this at 1e-8 per entry; the bench tracks
+    # the actual ceiling (~1e-11: both sides run the identical trajectory)
+    cbatch = ScenarioBatch.from_scenarios(scns)
+    cpred = fleet_tail(cbatch, Q, method="euler")
+    errs = []
+    for i, te in enumerate(scalar_tails):
+        vt = cpred.totals(i)
+        for k, v in te.items():
+            if np.isfinite(v) and np.isfinite(vt[k]):
+                errs.append(abs(v - vt[k]) / max(abs(v), abs(vt[k]), 1e-300))
+            elif np.isfinite(v) != np.isfinite(vt[k]):
+                errs.append(float("inf"))
+    euler_vec_err = float(np.max(errs))
+    emit("tail_euler_vec_vs_scalar", 0.0, f"{euler_vec_err:.1e}_max_rel_err")
 
     # -- asymptote-vs-Euler p99 gap over the corpus (model headline) ----------
     gaps = []
@@ -97,7 +115,10 @@ def tail_rows(out_dir: Path | None = None) -> dict:
         "scalar_us_per_scenario": us_scalar / len(scns),
         "sweep_rows": rows,
         "vec_euler_rows_per_sec": euler_rps,
+        "euler_vec_rows_per_s": euler_rps,
         "vec_asym_rows_per_sec": asym_rps,
+        "euler_vec_slowdown_vs_asym": float(slowdown),
+        "euler_vec_vs_scalar_max_err": euler_vec_err,
         "asym_vs_euler_p99_mean_gap_pct": gap_pct,
         "p99_over_mean_crossover_ratio": ratio,
         "station_pass_speedup": float(speedup),

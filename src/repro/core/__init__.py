@@ -60,6 +60,7 @@ from .tail import (
     proc_station,
     sojourn_cdf,
     sojourn_mean,
+    sojourn_pdf,
     sojourn_quantile,
 )
 from .queueing import (

@@ -57,7 +57,9 @@ __all__ = [
     "offload_stations",
     "mm1_sojourn_quantile",
     "resolve_tail_method",
+    "euler_grow_iters",
     "sojourn_cdf",
+    "sojourn_pdf",
     "sojourn_quantile",
     "sojourn_mean",
 ]
@@ -79,11 +81,36 @@ _EULER_WEIGHTS = np.array(
 )
 
 # fixed iteration counts so scalar and vectorized quantiles are deterministic
-# and bit-comparable: geometric bracket growth, then bisection
-BRACKET_GROW_ITERS = 64
-BISECT_ITERS = 100
+# and bit-comparable; the scalar-vs-vec agreement gate (<= 1e-8 on euler
+# quantiles) depends on both sides walking the IDENTICAL search trajectory,
+# because the Euler-inverted CDF of near-deterministic mixtures carries
+# oscillatory inversion noise (~e^-A amplitude, wavelength ~t/(N+M+1)) that
+# can cross a quantile level more than once — two different-but-correct root
+# finders may land on different crossings. The shared trajectory is:
+# geometric bracket growth from 2*mean (doubling count derived from q — see
+# ``euler_grow_iters``), EULER_BISECT_ITERS bisections to isolate a bracket
+# narrower than the noise wavelength, then EULER_NEWTON_ITERS safeguarded
+# Newton steps on the free Abate-Whitt density (midpoint fallback whenever
+# the Newton candidate leaves the bracket).
+EULER_BISECT_ITERS = 10
+EULER_NEWTON_ITERS = 8
 ETA_GROW_ITERS = 64
 ETA_BISECT_ITERS = 80
+
+
+def euler_grow_iters(q: float) -> int:
+    """Bracket doublings from ``2 * mean`` guaranteed to cover the q-quantile.
+
+    Markov's inequality gives ``P(T > t) <= mean/t``, so ``t_q <=
+    mean/(1-q)`` and ``ceil(log2(1/(1-q)))`` doublings of ``2 * mean`` always
+    reach past it; one extra doubling of margin keeps the ~e^-A inversion
+    noise from faking ``F(hi) < q`` right at the boundary. A pure function of
+    q (static at trace time) so the jitted batch path runs the same growth
+    schedule as the scalar without data-dependent iteration counts.
+    """
+    if not 0.0 < q < 1.0:
+        raise ValueError(f"quantile must be in (0, 1), got {q}")
+    return max(0, math.ceil(math.log2(1.0 / (1.0 - q)))) + 1
 
 # gamma service with cv^2 below this is evaluated as deterministic: the exact
 # transform needs shape * log(1 + theta/shape-ish) with shape = 1/cv^2, which
@@ -314,6 +341,28 @@ def _unstable(stations: Sequence[Station]) -> bool:
 # ---------------------------------------------------------------------------
 
 
+def _cdf_pdf(stations: Sequence[Station], t_arr: np.ndarray):
+    """(F(t), f(t)) of the composed sojourn from ONE set of transform
+    evaluations: Abate-Whitt inverts any transform on the same contour
+    ``theta_k = (A + 2 pi i k) / (2t)`` — the CDF's transform is
+    ``T*(theta)/theta``, the density's is ``T*(theta)`` itself. Sharing the
+    ``T*`` products is what makes the quantile search's Newton derivative
+    free. The density is clipped at 0 (inversion noise dips slightly negative
+    in flat regions; the safeguard treats zero as "fall back to bisection").
+    """
+    ks = np.arange(EULER_N + EULER_M + 1)
+    theta = (EULER_A + 2j * np.pi * ks) / (2.0 * t_arr[..., None])
+    vals = _total_lst(stations, theta)
+    sign = np.where(ks == 0, 0.5, 1.0) * ((-1.0) ** ks)
+    window = slice(EULER_N, EULER_N + EULER_M + 1)
+    scale = np.exp(EULER_A / 2.0) / t_arr
+    cdf_part = np.cumsum(sign * (vals / theta).real, axis=-1)
+    pdf_part = np.cumsum(sign * vals.real, axis=-1)
+    cdf = np.clip(scale * (cdf_part[..., window] @ _EULER_WEIGHTS), 0.0, 1.0)
+    pdf = np.maximum(scale * (pdf_part[..., window] @ _EULER_WEIGHTS), 0.0)
+    return cdf, pdf
+
+
 def sojourn_cdf(stations: Sequence[Station], t) -> np.ndarray:
     """P(T <= t) of the composed sojourn, by numeric transform inversion.
 
@@ -332,6 +381,17 @@ def sojourn_cdf(stations: Sequence[Station], t) -> np.ndarray:
     return out if np.ndim(t) else out[0]
 
 
+def sojourn_pdf(stations: Sequence[Station], t) -> np.ndarray:
+    """Density f(t) of the composed sojourn by the same Euler inversion
+    (transform ``T*(theta)`` bare instead of ``T*(theta)/theta``), clipped at
+    0. Smoothed at atoms — an M/D/1 jump shows up as a steep finite peak of
+    width ~``t/(N+M+1)``, not a delta.
+    """
+    t_arr = np.atleast_1d(np.asarray(t, dtype=np.float64))
+    pdf = _cdf_pdf(stations, t_arr)[1]
+    return pdf if np.ndim(t) else pdf[0]
+
+
 def mm1_sojourn_quantile(lam: float, mu: float, q: float) -> float:
     """Exact M/M/1 sojourn quantile: t_q = -ln(1 - q) / (mu - lambda).
 
@@ -347,19 +407,46 @@ def mm1_sojourn_quantile(lam: float, mu: float, q: float) -> float:
 
 
 def _quantile_euler(stations: Sequence[Station], q: float) -> float:
+    """Quantile of the Euler-inverted CDF along the shared search trajectory.
+
+    Three phases, all with iteration counts fixed by module constants so the
+    vectorized twin (``repro.fleet.euler_vec``) can replay the identical
+    evaluation sequence: (1) geometric growth from ``2 * mean`` — anchors the
+    bracket to the *leftmost* octave where the CDF reaches q, which matters
+    because the inversion noise of near-deterministic mixtures can cross q
+    more than once; (2) ``EULER_BISECT_ITERS`` bisections, shrinking the
+    bracket below the noise wavelength ~``t/(N+M+1)`` so exactly one crossing
+    remains inside; (3) ``EULER_NEWTON_ITERS`` safeguarded Newton steps using
+    the free density from ``_cdf_pdf``, falling back to the midpoint whenever
+    the Newton candidate leaves the bracket (so the bracket still halves and
+    the worst case stays a bisection).
+    """
     mean = sojourn_mean(stations)
     if not math.isfinite(mean):
         return math.inf
-    hi = np.asarray(max(2.0 * mean, 1e-12))
-    for _ in range(BRACKET_GROW_ITERS):
+    hi0 = np.asarray(max(2.0 * mean, 1e-12))
+    hi = hi0
+    for _ in range(euler_grow_iters(q)):
         hi = np.where(sojourn_cdf(stations, hi) < q, hi * 2.0, hi)
-    lo = np.zeros_like(hi)
-    for _ in range(BISECT_ITERS):
+    # if the bracket grew, the last doubled-from point hi/2 is a known
+    # below-q evaluation — one free bisection
+    lo = np.where(hi > hi0, 0.5 * hi, 0.0)
+    for _ in range(EULER_BISECT_ITERS):
         mid = 0.5 * (lo + hi)
         below = sojourn_cdf(stations, mid) < q
         lo = np.where(below, mid, lo)
         hi = np.where(below, hi, mid)
-    return float(0.5 * (lo + hi))
+    t = 0.5 * (lo + hi)
+    for _ in range(EULER_NEWTON_ITERS):
+        cdf, pdf = _cdf_pdf(stations, np.atleast_1d(t))
+        cdf, pdf = cdf[0], pdf[0]
+        below = cdf < q
+        lo = np.where(below, t, lo)
+        hi = np.where(below, hi, t)
+        newton = t - (cdf - q) / np.where(pdf > 0.0, pdf, 1.0)
+        ok = (pdf > 0.0) & (newton > lo) & (newton < hi)
+        t = np.where(ok, newton, 0.5 * (lo + hi))
+    return float(np.clip(t, lo, hi))
 
 
 # ---------------------------------------------------------------------------

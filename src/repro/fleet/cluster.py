@@ -52,7 +52,7 @@ from repro.core.scenario import (
     implied_service_var,
 )
 from repro.core.simulation import steady_slice
-from repro.core.tail import resolve_tail_method
+from repro.core.tail import euler_grow_iters, resolve_tail_method
 
 from .analytic_vec import (
     _device_latency_vec,
@@ -210,7 +210,7 @@ def _predict_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum):
 
 
 def _predict_tail_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum, q,
-                      method: str):
+                      method: str, grow_iters: int | None = None):
     """The q-quantile twin of :func:`_predict_vec`: the same station
     composition an SLO-mode ``AdaptiveOffloadManager`` prices scalar-side
     (device NIC -> aggregate-mixture M/G/1 wait + OWN service -> return NIC),
@@ -227,7 +227,7 @@ def _predict_tail_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum, q,
         "fkind": dev_kind,
         "fmean": jnp.broadcast_to(cst["dev_s"], (n,)),
         "fvar": jnp.broadcast_to(cst["dev_var"], (n,)),
-    }), q, method=method)
+    }), q, method=method, slot_kinds=(None,), grow_iters=grow_iters)
 
     own_var = _implied_var_vec(cst["edge_model"], cst["edge_s"], cst["edge_var"])
     lam = lam_hat[:, None]
@@ -254,8 +254,17 @@ def _predict_tail_vec(cst, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum, q,
         {"lam": lam_tot, "wkind": kexp, "wmean": res_mean, "wvar": zero,
          "fkind": kexp, "fmean": res_mean, "fvar": zero},
     )
-    t_edge = sojourn_quantile_vec(stations, q, method=method)
+    t_edge = sojourn_quantile_vec(stations, q, method=method,
+                                  slot_kinds=("nic", None, "nic"),
+                                  grow_iters=grow_iters)
     return t_dev, t_edge
+
+
+def _tail_grow_iters(slo_quantile: float, tail_method: str) -> int | None:
+    """Static bracket-doubling count for the euler tail path (None for the
+    asymptote) — computed where ``slo_quantile`` is still a Python float so
+    the jitted paths can pass it through as a static argument."""
+    return euler_grow_iters(slo_quantile) if tail_method == "euler" else None
 
 
 def _decide_vec(t_dev, t_edge, prev_choice, hysteresis, use_hysteresis):
@@ -321,7 +330,8 @@ def predict_decisions(
         else:
             t_dev, t_edge = _predict_tail_vec(
                 c, lam_hat, bw_hat, bg_lam, bg_wsum, bg_ssum,
-                jnp.float64(slo_quantile), tail_method)
+                jnp.float64(slo_quantile), tail_method,
+                _tail_grow_iters(slo_quantile, tail_method))
         if prev_choice is None:
             prev = jnp.full(lam_hat.shape, ON_DEVICE, dtype=jnp.int32)
             use_h = jnp.bool_(False)
@@ -427,7 +437,8 @@ def _closed_loop_scan(cst, bw_true, lam_true, exo_true, *, window: int,
         else:
             t_dev, t_edge = _predict_tail_vec(
                 cst, lam_hat, est_bw, bg_lam, bg_wsum, bg_ssum,
-                jnp.float64(slo_q), tail_method)
+                jnp.float64(slo_q), tail_method,
+                _tail_grow_iters(slo_q, tail_method))
         # hysteresis compares against a PREVIOUS decision, which exists once
         # every cohort has decided at least once
         decided = _decide_vec(t_dev, t_edge, prev_choice, hysteresis, idx >= stagger)
@@ -511,16 +522,16 @@ def _latency_tables_jit(cst, lam_true, bw_true, exo_true, choices):
     return t_dev, t_edge, endo_total
 
 
-@partial(jax.jit, static_argnames=("tail_method",))
+@partial(jax.jit, static_argnames=("tail_method", "grow_iters"))
 def _latency_tables_tail_jit(cst, lam_true, bw_true, exo_true, choices, q,
-                             *, tail_method: str):
+                             *, tail_method: str, grow_iters: int | None = None):
     """The q-quantile twin of :func:`_latency_tables_jit` (analytic
     semantics: mixture mean as s_edge, exactly like ``_edge_tail_vec``)."""
     t_n, n = lam_true.shape
     e_n = exo_true.shape[1]
     c, endo_total = _truth_batch(cst, lam_true, bw_true, exo_true, choices)
-    t_dev = _device_tail_vec(c, q, tail_method).reshape(t_n, n)
-    t_edge = _edge_tail_vec(c, q, tail_method).reshape(t_n, n, e_n)
+    t_dev = _device_tail_vec(c, q, tail_method, grow_iters).reshape(t_n, n)
+    t_edge = _edge_tail_vec(c, q, tail_method, grow_iters).reshape(t_n, n, e_n)
     return t_dev, t_edge, endo_total
 
 
@@ -536,7 +547,8 @@ def _score_assignment(
         t_dev, t_edge, endo_total = _latency_tables_jit(*args)
     else:
         t_dev, t_edge, endo_total = _latency_tables_tail_jit(
-            *args, jnp.float64(slo_quantile), tail_method=tail_method)
+            *args, jnp.float64(slo_quantile), tail_method=tail_method,
+            grow_iters=_tail_grow_iters(slo_quantile, tail_method))
     stacked = jnp.concatenate([t_dev[:, :, None], t_edge], axis=2)
     idx = (jnp.asarray(choices, dtype=jnp.int32) + 1)[..., None]
     lat = jnp.take_along_axis(stacked, idx, axis=2)[..., 0]
@@ -753,6 +765,21 @@ class Equilibrium:
     def mean_latency_s(self) -> float:
         return float(np.mean(self.latency_s))
 
+    @property
+    def max_latency_s(self) -> float:
+        """Worst per-client latency at the fixed point — the number an SLO
+        constrains. With ``slo_quantile`` set at solve time, ``latency_s``
+        already holds per-client quantiles, so this is the fleet-wide
+        worst-client q-quantile."""
+        return float(np.max(self.latency_s))
+
+    def meets_slo(self, slo_s: float) -> bool:
+        """Feasibility predicate the provisioning solver bisects over: a
+        converged fixed point whose worst client is within the budget.
+        Non-convergence counts as infeasible — an oscillating assignment has
+        no per-client latency anyone can promise."""
+        return bool(self.converged and self.max_latency_s <= slo_s)
+
     def counts(self) -> dict[str, int]:
         """Clients per target, keyed like ``Decision.target_name``."""
         out = {"on_device": int(np.sum(self.choices == ON_DEVICE))}
@@ -769,7 +796,8 @@ def _equilibrium_tables(cst_j, lam, bw, exo, choices,
         t_dev, t_edge, endo = _latency_tables_jit(*args)
     else:
         t_dev, t_edge, endo = _latency_tables_tail_jit(
-            *args, jnp.float64(slo_quantile), tail_method=tail_method)
+            *args, jnp.float64(slo_quantile), tail_method=tail_method,
+            grow_iters=_tail_grow_iters(slo_quantile, tail_method))
     return np.asarray(t_dev)[0], np.asarray(t_edge)[0], np.asarray(endo)[0]
 
 

@@ -16,6 +16,13 @@ All math runs in float64 (complex128 contours) inside a scoped
 untouched. Algorithmic constants (Euler A/N/M, bracket/bisection iteration
 counts) are imported from the scalar module — the agreement gate depends on
 both sides running the identical algorithm.
+
+The exact euler inversion itself lives in :mod:`repro.fleet.euler_vec`
+(q-derived growth schedule + safeguarded Newton on the free Abate-Whitt
+density, static per-slot service-kind hints), which replays the scalar
+search trajectory phase for phase — this module routes ``method="euler"``
+there and keeps the asymptote path plus the ScenarioBatch-facing station
+builders and the public ``fleet_tail`` entry point.
 """
 
 from __future__ import annotations
@@ -29,23 +36,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tail import (
-    BISECT_ITERS,
-    BRACKET_GROW_ITERS,
     ETA_BISECT_ITERS,
     ETA_GROW_ITERS,
-    EULER_A,
-    EULER_M,
-    EULER_N,
     GAMMA_DET_CV2,
     KIND_DET,
     KIND_EXP,
     KIND_GAMMA,
-    _EULER_WEIGHTS,
+    euler_grow_iters,
     resolve_tail_method,
 )
 
 from .analytic_vec import _implied_var_vec
 from .batch import ScenarioBatch
+from .euler_vec import quantile_euler_vec
 
 __all__ = ["FleetTailPrediction", "fleet_tail", "sojourn_quantile_vec"]
 
@@ -65,83 +68,6 @@ def _stack_stations(*stations) -> dict[str, jnp.ndarray]:
     keys = ("lam", "wkind", "wmean", "wvar", "fkind", "fmean", "fvar")
     return {k: jnp.stack([jnp.asarray(s[k]) for s in stations], axis=-1)
             for k in keys}
-
-
-def _service_lst_vec(kind, mean, var, theta):
-    """Complex LST E[e^{-theta S}]; fields broadcast against theta's trailing
-    contour axis. mean == 0 -> 1 (inert factor)."""
-    det = jnp.exp(-theta * mean)
-    exp_ = 1.0 / (1.0 + theta * mean)
-    gamma_real = var > GAMMA_DET_CV2 * mean * mean  # tail.GAMMA_DET_CV2 cutoff
-    safe_mean = jnp.where(mean > 0, mean, 1.0)
-    safe_var = jnp.where(gamma_real, var, 1.0)
-    shape = safe_mean * safe_mean / safe_var
-    scale = safe_var / safe_mean
-    gam = jnp.exp(-shape * jnp.log(1.0 + theta * scale))
-    gam = jnp.where(gamma_real, gam, det)
-    out = jnp.where(kind == KIND_DET, det, jnp.where(kind == KIND_EXP, exp_, gam))
-    return jnp.where(mean > 0, out, jnp.ones_like(out))
-
-
-def _total_lst_vec(st, theta):
-    """Product of per-station sojourn transforms; ``theta`` has a trailing
-    contour axis K, station fields gain it via broadcasting: (..., S, K)."""
-    lam = st["lam"][..., None]
-    wmean = st["wmean"][..., None]
-    rho = lam * wmean
-    f = _service_lst_vec(st["fkind"][..., None], st["fmean"][..., None],
-                         st["fvar"][..., None], theta)
-    sw = _service_lst_vec(st["wkind"][..., None], wmean, st["wvar"][..., None], theta)
-    w = (1.0 - rho) * theta / (theta - lam * (1.0 - sw))
-    w = jnp.where(rho > 0, w, jnp.ones_like(w))
-    return jnp.prod(w * f, axis=-2)
-
-
-def _implied_var_st(kind, mean, var):
-    return jnp.where(kind == KIND_EXP, mean * mean,
-                     jnp.where(kind == KIND_GAMMA, var, 0.0))
-
-
-def _sojourn_mean_vec(st):
-    """Per-path mean: sum of P-K waits + full service means (inf past rho=1)."""
-    rho = st["lam"] * st["wmean"]
-    v = _implied_var_st(st["wkind"], st["wmean"], st["wvar"])
-    w = st["lam"] * (st["wmean"] ** 2 + v) / (2.0 * jnp.maximum(1.0 - rho, _TINY))
-    w = jnp.where(rho > 0, jnp.where(rho < 1.0, w, _INF), 0.0)
-    return jnp.sum(w + st["fmean"], axis=-1)
-
-
-def _cdf_vec(st, t):
-    """Abate-Whitt Euler CDF at t (..., broadcast against station fields'
-    leading dims); identical constants to ``repro.core.tail.sojourn_cdf``."""
-    ks = jnp.arange(EULER_N + EULER_M + 1, dtype=jnp.float64)
-    theta = (EULER_A + 2j * jnp.pi * ks) / (2.0 * t[..., None])
-    vals = _total_lst_vec(st, theta[..., None, :]) / theta
-    terms = jnp.where(ks == 0, 0.5, 1.0) * ((-1.0) ** ks) * vals.real
-    partial_sums = jnp.cumsum(terms, axis=-1)
-    acc = partial_sums[..., EULER_N : EULER_N + EULER_M + 1] @ jnp.asarray(_EULER_WEIGHTS)
-    return jnp.clip(jnp.exp(EULER_A / 2.0) / t * acc, 0.0, 1.0)
-
-
-def _quantile_euler_vec(st, q):
-    mean = _sojourn_mean_vec(st)
-    safe_mean = jnp.where(jnp.isfinite(mean), mean, 1.0)
-    hi0 = jnp.maximum(2.0 * safe_mean, 1e-12)
-
-    def grow(_, hi):
-        return jnp.where(_cdf_vec(st, hi) < q, hi * 2.0, hi)
-
-    hi = jax.lax.fori_loop(0, BRACKET_GROW_ITERS, grow, hi0)
-
-    def bisect(_, carry):
-        lo, hi = carry
-        mid = 0.5 * (lo + hi)
-        below = _cdf_vec(st, mid) < q
-        return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
-
-    lo, hi = jax.lax.fori_loop(
-        0, BISECT_ITERS, bisect, (jnp.zeros_like(hi), hi))
-    return 0.5 * (lo + hi)
 
 
 # ---------------------------------------------------------------------------
@@ -256,14 +182,23 @@ def _quantile_asymptote_vec(st, q):
     return jnp.where(no_pole, jnp.sum(st["fmean"], axis=-1), t_q)
 
 
-def sojourn_quantile_vec(st: dict, q, *, method: str = "euler"):
+def sojourn_quantile_vec(st: dict, q, *, method: str = "euler",
+                         slot_kinds: tuple | None = None,
+                         grow_iters: int | None = None):
     """q-quantile of the composed sojourn for station-field arrays (station
-    axis last). Traceable; used inside the jitted fleet/cluster paths."""
+    axis last). Traceable; used inside the jitted fleet/cluster paths.
+
+    ``slot_kinds`` is an optional static tuple of per-slot service-kind hints
+    for the euler path (``"exp"``/``"nic"`` = statically exponential,
+    ``None`` = runtime dispatch) — see
+    :func:`repro.fleet.euler_vec.quantile_euler_vec`. ``grow_iters`` is the
+    euler path's static bracket-doubling count (``euler_grow_iters(q)``),
+    required when q is a tracer. The asymptote path ignores both."""
     unstable = jnp.any(st["lam"] * st["wmean"] >= 1.0, axis=-1)
     if method == "asymptote":
         val = _quantile_asymptote_vec(st, q)
     elif method == "euler":
-        val = _quantile_euler_vec(st, q)
+        val = quantile_euler_vec(st, q, slot_kinds, grow_iters)
     else:
         raise ValueError(f"unknown method {method!r} (known: euler, asymptote)")
     # exact closed form for a pure single M/M/1 station (both methods), as in
@@ -335,24 +270,51 @@ def _edge_stations(c) -> dict:
     return _stack_stations(nic_in, proc, nic_out)
 
 
-def _device_tail_vec(c, q, method: str):
+def _device_tail_vec(c, q, method: str, grow_iters: int | None = None,
+                     dev_hint: str | None = None):
     """(B,) on-device q-quantile — the tail twin of ``_device_latency_vec``."""
-    return sojourn_quantile_vec(_device_stations(c), q, method=method)
+    return sojourn_quantile_vec(_device_stations(c), q, method=method,
+                                slot_kinds=(dev_hint,), grow_iters=grow_iters)
 
 
-def _edge_tail_vec(c, q, method: str):
-    """(B, E) offload q-quantile — the tail twin of ``_edge_latency_vec``."""
-    val = sojourn_quantile_vec(_edge_stations(c), q, method=method)
+def _edge_tail_vec(c, q, method: str, grow_iters: int | None = None,
+                   proc_hint: str | None = None):
+    """(B, E) offload q-quantile — the tail twin of ``_edge_latency_vec``.
+
+    The NIC slots of the offload tandem are exponential with ``wmean ==
+    fmean`` by construction (``nic_station``), so the euler kernel gets
+    static ``"nic"`` hints for slots 0 and 2 — the processing slot gets the
+    batch-derived ``proc_hint`` (uniform model column) or runtime dispatch."""
+    val = sojourn_quantile_vec(_edge_stations(c), q, method=method,
+                               slot_kinds=("nic", proc_hint, "nic"),
+                               grow_iters=grow_iters)
     return jnp.where(c["edge_mask"], val, _INF)
 
 
-@partial(jax.jit, static_argnames=("method",))
-def _fleet_tail_jit(c, q, *, method: str):
-    t_dev = _device_tail_vec(c, q, method)
-    t_edge = _edge_tail_vec(c, q, method)
+@partial(jax.jit, static_argnames=("method", "grow_iters", "dev_hint",
+                                   "proc_hint"))
+def _fleet_tail_jit(c, q, *, method: str, grow_iters: int | None,
+                    dev_hint: str | None, proc_hint: str | None):
+    t_dev = _device_tail_vec(c, q, method, grow_iters, dev_hint)
+    t_edge = _edge_tail_vec(c, q, method, grow_iters, proc_hint)
     stacked = jnp.concatenate([t_dev[:, None], t_edge], axis=1)
     best = jnp.argmin(stacked, axis=1) - 1
     return t_dev, t_edge, best
+
+
+def _uniform_kind_hint(kinds: np.ndarray) -> str | None:
+    """Static service-kind hint for a concrete model column: ``"det"`` /
+    ``"exp"`` when every row dispatches to the same branch (the common case —
+    sweeps vary load, not service model), else None (runtime dispatch). The
+    hints select formulas, never change them, so this is a pure perf
+    derivation — on a uniformly non-gamma batch the euler kernel traces no
+    ``log`` at all."""
+    k = np.asarray(kinds)
+    if k.size and np.all(k == KIND_DET):
+        return "det"
+    if k.size and np.all(k == KIND_EXP):
+        return "exp"
+    return None
 
 
 @dataclass(frozen=True)
@@ -393,9 +355,19 @@ def fleet_tail(batch: ScenarioBatch, q: float, *, method: str = "euler") -> Flee
     if method not in ("euler", "asymptote"):
         raise ValueError(f"unknown method {method!r} (known: euler, asymptote)")
     method = resolve_tail_method(q, method)
+    grow_iters = euler_grow_iters(q) if method == "euler" else None
+    np_arrays = batch.arrays()
+    dev_hint = _uniform_kind_hint(np_arrays["dev_model"])
+    proc_hint = None
+    if not np.any(np.asarray(np_arrays["bg_lam"]) > 0.0):
+        proc_hint = _uniform_kind_hint(np_arrays["edge_model"])
     with jax.experimental.enable_x64():
-        arrays = {k: jnp.asarray(v) for k, v in batch.arrays().items()}
-        t_dev, t_edge, best = _fleet_tail_jit(arrays, jnp.float64(q), method=method)
+        arrays = {k: jnp.asarray(v) for k, v in np_arrays.items()}
+        t_dev, t_edge, best = _fleet_tail_jit(arrays, jnp.float64(q),
+                                              method=method,
+                                              grow_iters=grow_iters,
+                                              dev_hint=dev_hint,
+                                              proc_hint=proc_hint)
         return FleetTailPrediction(
             q=q,
             t_dev=np.asarray(t_dev),

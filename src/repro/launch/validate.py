@@ -60,6 +60,14 @@ def _print_report(rep, elapsed_s: float) -> None:
     tvec = d["scalar_vs_vec_tail"]
     print(f"  scalar vs vectorized tail:     max rel err {tvec['max_rel_err']:.2e} "
           f"(tol {tvec['tol']:.0e}) -> {'PASS' if tvec['passed'] else 'FAIL'}")
+    ev = d["tail_euler_vec"]
+    if ev["max_rel_err"] is None:
+        print("  batched exact euler inversion: not exercised (no entries at "
+              f"rho <= {ev['rho_max']:.2f})")
+    else:
+        print(f"  batched exact euler inversion: max rel err {ev['max_rel_err']:.2e} "
+              f"over {ev['n_entries']} entries at rho <= {ev['rho_max']:.2f} "
+              f"(tol {ev['tol']:.0e}) -> {'PASS' if ev['passed'] else 'FAIL'}")
     tg = d["tail_gate"]
     if tg["n"] == 0:
         print(f"  analytic p{tg['tail_pct']:.0f} vs simulated:     not exercised "

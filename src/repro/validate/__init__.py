@@ -28,11 +28,13 @@ from .corpus import (
     save_corpus,
 )
 from .differential import (
+    DEFAULT_EULER_VEC_TOL,
     DEFAULT_GOLDEN_TOL,
     DEFAULT_MAPE_BUDGET_PCT,
     DEFAULT_TAIL_BUDGET_PCT,
     DEFAULT_TAIL_PCT,
     DEFAULT_VEC_TOL,
+    EULER_VEC_RHO_MAX,
     EntryReport,
     ValidationReport,
     run_differential,

@@ -54,6 +54,8 @@ __all__ = [
     "DEFAULT_GOLDEN_TOL",
     "DEFAULT_TAIL_BUDGET_PCT",
     "DEFAULT_TAIL_PCT",
+    "DEFAULT_EULER_VEC_TOL",
+    "EULER_VEC_RHO_MAX",
 ]
 
 DEFAULT_MAPE_BUDGET_PCT = 5.0
@@ -66,6 +68,15 @@ DEFAULT_GOLDEN_TOL = 1e-9
 # percentile estimator.
 DEFAULT_TAIL_BUDGET_PCT = 10.0
 DEFAULT_TAIL_PCT = 99.0
+# tail-euler-vec gate: the batched exact Euler inversion vs the scalar one,
+# per corpus entry. Both sides deliberately run the IDENTICAL search
+# trajectory (grow/bisect/Newton), so the only divergence left is float
+# noise flipping a boolean bisection decision at a razor-edge coincidence —
+# observed agreement is ~1e-11; 1e-8 is the contract. Restricted to
+# rho <= EULER_VEC_RHO_MAX: deeper into saturation the transform's
+# conditioning degrades faster than any scalar/vec comparison can resolve.
+DEFAULT_EULER_VEC_TOL = 1e-8
+EULER_VEC_RHO_MAX = 0.95
 
 
 def tail_gated(e: CorpusEntry) -> bool:
@@ -176,6 +187,9 @@ class ValidationReport:
     tail_budget_pct: float = DEFAULT_TAIL_BUDGET_PCT
     tail_pct: float = DEFAULT_TAIL_PCT
     tail_vec_max_rel_err: float | None = None  # scalar tail vs fleet_tail
+    euler_vec_max_rel_err: float | None = None  # batched exact euler vs scalar
+    euler_vec_tol: float = DEFAULT_EULER_VEC_TOL
+    euler_vec_n: int = 0  # corpus entries inside the rho <= 0.95 gate
 
     @property
     def vec_passed(self) -> bool:
@@ -201,6 +215,11 @@ class ValidationReport:
             self.tail_vec_max_rel_err <= self.vec_tol
 
     @property
+    def euler_vec_passed(self) -> bool:
+        return self.euler_vec_max_rel_err is None or \
+            self.euler_vec_max_rel_err <= self.euler_vec_tol
+
+    @property
     def tail_passed(self) -> bool:
         if self.tail.n == 0:
             return True
@@ -209,7 +228,8 @@ class ValidationReport:
     @property
     def passed(self) -> bool:
         return (self.vec_passed and self.golden_passed and self.gate_passed
-                and self.tail_vec_passed and self.tail_passed)
+                and self.tail_vec_passed and self.euler_vec_passed
+                and self.tail_passed)
 
     def to_dict(self) -> dict:
         return {
@@ -241,6 +261,13 @@ class ValidationReport:
                 "max_rel_err": self.tail_vec_max_rel_err,
                 "tol": self.vec_tol,
                 "passed": self.tail_vec_passed,
+            },
+            "tail_euler_vec": {
+                "max_rel_err": self.euler_vec_max_rel_err,
+                "tol": self.euler_vec_tol,
+                "rho_max": EULER_VEC_RHO_MAX,
+                "n_entries": self.euler_vec_n,
+                "passed": self.euler_vec_passed,
             },
             "bands": {k: v.to_dict() for k, v in self.bands.items()},
             "regimes": {k: v.to_dict() for k, v in self.regimes.items()},
@@ -328,6 +355,7 @@ def run_differential(
     mape_budget_pct: float = DEFAULT_MAPE_BUDGET_PCT,
     vec_tol: float = DEFAULT_VEC_TOL,
     golden_tol: float = DEFAULT_GOLDEN_TOL,
+    euler_vec_tol: float = DEFAULT_EULER_VEC_TOL,
     bootstrap: int = 200,
     simulate: bool = True,
     sim_cross_count: int = 3,
@@ -373,6 +401,21 @@ def run_differential(
                                    for k, v in tot.items()))
         else:
             golden_errs.append(None)
+
+    # -- tail-euler-vec: batched exact inversion vs scalar euler --------------
+    # Explicit method="euler" on both sides (immune to default-method drift):
+    # the batched kernel must reproduce the scalar Pollaczek-Khinchine
+    # inversion to euler_vec_tol on every entry inside the rho gate.
+    euler_idx = [i for i, e in enumerate(entries) if e.rho <= EULER_VEC_RHO_MAX]
+    euler_vec_max = None
+    if euler_idx:
+        pred_euler = fleet_tail(batch, q, method="euler")
+        euler_errs = []
+        for i in euler_idx:
+            sc = analytic_tail(entries[i].scenario, q, method="euler")
+            vtail = pred_euler.totals(i)
+            euler_errs.append(max(_rel_err(v, vtail[k]) for k, v in sc.items()))
+        euler_vec_max = float(max(euler_errs))
 
     # -- paths 3+4: discrete-event simulation ---------------------------------
     sim_results: dict[int, tuple[str, int, float, BootstrapCI, float]] = {}
@@ -465,4 +508,7 @@ def run_differential(
         tail_budget_pct=tail_budget_pct,
         tail_pct=tail_pct,
         tail_vec_max_rel_err=float(max(tail_vec_errs)),
+        euler_vec_max_rel_err=euler_vec_max,
+        euler_vec_tol=euler_vec_tol,
+        euler_vec_n=len(euler_idx),
     )

@@ -1,0 +1,179 @@
+"""Contracts for the SLO-constrained provisioning solver.
+
+Small fleets on purpose: every feasibility probe is a full equilibrium
+solve, and each distinct (n_clients, n_edges) shape JIT-compiles once — the
+tests below stay inside N in {4, 8}, E in {1..3} so the whole module reuses
+a handful of compilations. The asymptote tail engine drives most cases (the
+solver logic under test is identical); one case runs the exact euler engine
+end to end.
+"""
+
+import json
+
+import pytest
+
+from repro.core.latency import NetworkPath, Tier, Workload
+from repro.core.scenario import EdgeSpec, Scenario, ScenarioError
+from repro.fleet import solve_equilibrium
+from repro.plan import ProvisionPlan, ProvisionSpace, provision
+
+BASE = Scenario(
+    workload=Workload(arrival_rate=4.0, req_bytes=30_000, res_bytes=1_000,
+                      name="plan-wl"),
+    device=Tier("cpu-only", 0.08),
+    edges=(EdgeSpec(Tier("edge", 0.04)),),
+    network=NetworkPath(2.0e6),
+    name="plan-base",
+)
+SPACE = ProvisionSpace(
+    base=BASE,
+    tiers=(Tier("slow", 0.040), Tier("fast", 0.015)),
+    max_edges=3,
+    bandwidths_Bps=(1.0e6, 2.0e6),
+    name="plan-space",
+)
+Q = 0.99
+
+
+def _feasible(space, n_edges, ti, bi, n_clients, slo_s, tail_method="asymptote"):
+    eq = solve_equilibrium(space.cluster_spec(n_edges, ti, bi, n_clients),
+                           slo_quantile=Q, tail_method=tail_method)
+    return eq.meets_slo(slo_s)
+
+
+def _grid_min(space, n_clients, slo_s):
+    """Exhaustive lexicographic minimum over the whole (E, tier, bw) grid."""
+    for e in range(1, space.max_edges + 1):
+        for ti in range(len(space.tiers)):
+            for bi in range(len(space.bandwidths_Bps)):
+                if _feasible(space, e, ti, bi, n_clients, slo_s):
+                    return (e, ti, bi)
+    return None
+
+
+class TestSolver:
+    def test_agrees_with_brute_force_grid(self):
+        """The bisection search must land on the exhaustive grid's
+        lexicographic minimum. This slo admits (2, slow, hi) — two slow
+        edges — so a non-lexicographic 'cheapest' notion would diverge."""
+        plan = provision(SPACE, 4, 0.16, q=Q, tail_method="asymptote")
+        assert plan is not None
+        got = (plan.n_edges, plan.tier_index, plan.bandwidth_index)
+        assert got == _grid_min(SPACE, 4, 0.16)
+        assert plan.max_latency_s <= 0.16
+        assert plan.evaluations <= 2 * 3 * 3  # bisection, not the full grid
+
+    def test_plan_is_component_wise_minimal(self):
+        plan = provision(SPACE, 8, 0.10, q=Q, tail_method="asymptote")
+        assert plan is not None
+        e, ti, bi = plan.n_edges, plan.tier_index, plan.bandwidth_index
+        best_t = len(SPACE.tiers) - 1
+        best_b = len(SPACE.bandwidths_Bps) - 1
+        if e > 1:
+            assert not _feasible(SPACE, e - 1, best_t, best_b, 8, 0.10)
+        if ti > 0:
+            assert not _feasible(SPACE, e, ti - 1, best_b, 8, 0.10)
+        if bi > 0:
+            assert not _feasible(SPACE, e, ti, bi - 1, 8, 0.10)
+        # and it genuinely needed more than the floor somewhere
+        assert (e, ti, bi) != (1, 0, 0)
+
+    def test_monotone_in_n_clients(self):
+        small = provision(SPACE, 4, 0.10, q=Q, tail_method="asymptote")
+        large = provision(SPACE, 8, 0.10, q=Q, tail_method="asymptote")
+        assert small is not None and large is not None
+        assert (small.n_edges, small.tier_index, small.bandwidth_index) <= \
+            (large.n_edges, large.tier_index, large.bandwidth_index)
+        assert large.n_edges > small.n_edges  # sized to actually scale
+
+    def test_monotone_in_budget(self):
+        loose = provision(SPACE, 8, 0.16, q=Q, tail_method="asymptote")
+        tight = provision(SPACE, 8, 0.10, q=Q, tail_method="asymptote")
+        assert loose is not None and tight is not None
+        assert (loose.n_edges, loose.tier_index, loose.bandwidth_index) <= \
+            (tight.n_edges, tight.tier_index, tight.bandwidth_index)
+        assert tight.n_edges > loose.n_edges
+
+    def test_trivial_budget_returns_cheapest_corner(self):
+        plan = provision(SPACE, 4, 10.0, q=Q, tail_method="asymptote")
+        assert plan is not None
+        assert (plan.n_edges, plan.tier_index, plan.bandwidth_index) == (1, 0, 0)
+        assert plan.evaluations <= 4
+
+    def test_impossible_budget_returns_none(self):
+        # below the fast tier's bare service time: no deployment can win
+        assert provision(SPACE, 4, 1e-3, q=Q, tail_method="asymptote") is None
+
+    def test_euler_engine_end_to_end(self):
+        plan = provision(SPACE, 4, 0.16, q=Q, tail_method="euler")
+        assert plan is not None
+        assert plan.tail_method == "euler"
+        assert plan.max_latency_s <= 0.16
+        assert _feasible(SPACE, plan.n_edges, plan.tier_index,
+                         plan.bandwidth_index, 4, 0.16, tail_method="euler")
+
+    def test_slack_and_diagnostics(self):
+        plan = provision(SPACE, 8, 0.10, q=Q, tail_method="asymptote")
+        assert plan.slack_s == pytest.approx(0.10 - plan.max_latency_s)
+        assert plan.slack_s >= 0.0
+        assert sum(plan.counts.values()) == 8
+        assert len(plan.rho_edges) == plan.n_edges
+        assert all(0.0 <= r < 1.0 for r in plan.rho_edges)
+        assert plan.mean_latency_s <= plan.max_latency_s * (1.0 + 1e-12)
+
+
+class TestSerialisation:
+    def test_plan_round_trips_through_json(self):
+        plan = provision(SPACE, 4, 0.16, q=Q, tail_method="asymptote")
+        rt = ProvisionPlan.from_dict(json.loads(json.dumps(plan.to_dict())))
+        assert rt == plan
+
+    def test_space_round_trips_through_json(self):
+        rt = ProvisionSpace.from_dict(json.loads(json.dumps(SPACE.to_dict())))
+        assert rt == SPACE
+        # and the round-tripped space instantiates identical candidates
+        assert rt.cluster_spec(2, 1, 0, 4) == SPACE.cluster_spec(2, 1, 0, 4)
+
+    def test_plan_from_dict_missing_field_raises(self):
+        plan = provision(SPACE, 4, 0.16, q=Q, tail_method="asymptote")
+        d = plan.to_dict()
+        del d["n_edges"]
+        with pytest.raises(ScenarioError):
+            ProvisionPlan.from_dict(d)
+
+
+class TestValidation:
+    def test_tiers_must_be_ordered_slow_to_fast(self):
+        with pytest.raises(ScenarioError, match="slowest to fastest"):
+            ProvisionSpace(base=BASE, tiers=(Tier("fast", 0.015),
+                                             Tier("slow", 0.040)),
+                           max_edges=2, bandwidths_Bps=(1e6,))
+
+    def test_bandwidths_must_ascend(self):
+        with pytest.raises(ScenarioError, match="ascending"):
+            ProvisionSpace(base=BASE, tiers=(Tier("t", 0.02),),
+                           max_edges=2, bandwidths_Bps=(2e6, 1e6))
+
+    def test_template_must_have_one_edge(self):
+        with pytest.raises(ScenarioError, match="exactly one edge"):
+            ProvisionSpace(base=Scenario(workload=BASE.workload,
+                                         device=BASE.device,
+                                         network=BASE.network, edges=()),
+                           tiers=(Tier("t", 0.02),), max_edges=2,
+                           bandwidths_Bps=(1e6,))
+
+    def test_bad_solver_inputs_rejected(self):
+        with pytest.raises(ScenarioError, match="n_clients"):
+            provision(SPACE, 0, 0.1)
+        with pytest.raises(ScenarioError, match="slo_s"):
+            provision(SPACE, 4, 0.0)
+        with pytest.raises(ScenarioError, match="quantile"):
+            provision(SPACE, 4, 0.1, q=1.5)
+
+    def test_parallelism_breaks_service_time_ties(self):
+        # s/k ordering: a 2-wide slow tier can outrank a narrower faster one
+        sp = ProvisionSpace(base=BASE,
+                            tiers=(Tier("one-wide", 0.030),
+                                   Tier("two-wide", 0.040, parallelism_k=2.0)),
+                            max_edges=2, bandwidths_Bps=(1e6,))
+        assert sp.tiers[1].parallelism_k == 2.0

@@ -187,6 +187,42 @@ class TestAnalyticTail:
                         continue
                     assert abs(v - vt[k]) / v <= 1e-6, (method, i, k)
 
+    def test_fleet_tail_euler_is_exact_batched_kernel(self):
+        """Regression: ``method="euler"`` on a batch must run the batched
+        exact inversion — matching scalar euler to <= 1e-8 — not silently
+        fall back to the asymptote, which is what the documented-but-unrouted
+        batch path did before the euler_vec kernel landed. Rows mix det/exp
+        devices, a GENERAL edge, and background tenants so both the
+        kind-hinted and runtime-dispatch paths are exercised."""
+        from repro.core.multitenant import TenantStream
+
+        scns = [
+            SCN,
+            Scenario(
+                workload=Workload(6.0, 40_000, 2_000),
+                device=Tier("dev-exp", 0.06, service_model=ServiceModel.EXPONENTIAL),
+                network=NetworkPath(4e6),
+                edges=(EdgeSpec(Tier("edge-gen", 0.02,
+                                     service_model=ServiceModel.GENERAL,
+                                     service_var=0.3 * 0.02**2),
+                                background=(TenantStream(5.0, 0.015, 0.015**2),)),),
+            ),
+        ]
+        batch = ScenarioBatch.from_scenarios(scns)
+        for q in (0.9, 0.99):
+            pred = fleet_tail(batch, q, method="euler")
+            asym = fleet_tail(batch, q, method="asymptote")
+            saw_gap = False
+            for i, s in enumerate(scns):
+                sc = analytic_tail(s, q, method="euler")
+                vt, at = pred.totals(i), asym.totals(i)
+                for k, v in sc.items():
+                    assert abs(v - vt[k]) <= 1e-8 * max(abs(v), 1.0), (q, i, k)
+                    saw_gap |= abs(at[k] - vt[k]) > 1e-6 * abs(v)
+            # the euler result is genuinely distinct from the asymptote's —
+            # a silent fallback would make the 1e-8 agreement above vacuous
+            assert saw_gap, q
+
     def test_fleet_tail_best_edge_convention(self):
         batch = ScenarioBatch.from_scenarios([SCN])
         pred = fleet_tail(batch, 0.99)

@@ -1,0 +1,200 @@
+"""Distributional contracts for the tail layer, swept over random tandems.
+
+Property sweep over random stable station tandems (device-style single
+stations and NIC->proc->NIC offload chains alike, drawn as raw
+``proc_station`` mixtures): the quantile inversion must behave like an
+inverse CDF — monotone in q, consistent under round-trip through
+``sojourn_cdf``, continuous (within the documented inversion noise) across
+the ``EULER_Q_MAX`` handoff to the asymptote, and bounded by the
+mean-derived Markov envelope.
+
+Runs under both property engines: real hypothesis when installed, and the
+seeded fallback (`tests/_prop.py`) that the hermetic container uses — CI
+forces the fallback explicitly via ``REPRO_FORCE_HYPOTHESIS_FALLBACK=1``.
+
+Tolerances are empirical but principled:
+
+  * round-trip |F(t_q) - q| <= 1e-6 holds for *continuous* (exponential /
+    gamma) mixtures, where the Euler inversion's error floor is ~1e-8;
+    deterministic services put atoms in the sojourn law, where a CDF
+    round-trip is ill-posed at the jump (the quantile is exact but F steps
+    over q) — those draw from the monotonicity/envelope sweeps instead;
+  * at the ``EULER_Q_MAX`` = 1 - 1e-6 handoff the ~1e-8 CDF noise floor is
+    ~1% of the surviving mass, so the euler quantile can only promise
+    CDF-consistency to within a couple of survival widths, and t-space
+    agreement with the asymptote to a few percent (noise floor x the local
+    log-slope, plus the asymptote's own subdominant-pole error).
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from _prop import given, settings, st
+from repro.core import tail as T
+
+# ---------------------------------------------------------------------------
+# strategies: random stable tandems
+# ---------------------------------------------------------------------------
+
+# one station: (mu, rho, kind, cv2). Service mean is 1/mu, arrival rho*mu.
+_STATION = st.tuples(
+    st.floats(0.5, 50.0),  # service rate mu
+    st.floats(0.05, 0.9),  # utilisation rho (strictly stable)
+    st.sampled_from([T.KIND_DET, T.KIND_EXP, T.KIND_GAMMA]),
+    st.floats(0.05, 1.5),  # cv^2 for GAMMA kinds
+)
+_TANDEM = st.lists(_STATION, min_size=1, max_size=3)
+# continuous-law tandems: no deterministic atoms, so the sojourn CDF is
+# strictly increasing and round-trip/density checks are well-posed
+_SMOOTH_STATION = st.tuples(
+    st.floats(0.5, 50.0),
+    st.floats(0.05, 0.9),
+    st.sampled_from([T.KIND_EXP, T.KIND_GAMMA]),
+    st.floats(0.05, 1.5),
+)
+_SMOOTH_TANDEM = st.lists(_SMOOTH_STATION, min_size=1, max_size=3)
+_Q = st.floats(0.5, 0.995)
+
+
+def _stations(params):
+    out = []
+    for mu, rho, kind, cv2 in params:
+        mean = 1.0 / mu
+        var = cv2 * mean * mean if kind == T.KIND_GAMMA else 0.0
+        out.append(T.proc_station(rho * mu, kind, mean, var, 1.0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# monotonicity
+# ---------------------------------------------------------------------------
+
+
+class TestMonotoneInQ:
+    @given(_TANDEM, st.tuples(st.floats(0.5, 0.999), st.floats(0.5, 0.999)))
+    @settings(max_examples=40, deadline=None)
+    def test_quantile_monotone_in_q_both_methods(self, params, qs):
+        sts = _stations(params)
+        q0, q1 = sorted(qs)
+        for method in ("euler", "asymptote"):
+            t0 = T.sojourn_quantile(sts, q0, method=method)
+            t1 = T.sojourn_quantile(sts, q1, method=method)
+            # non-strict: deterministic atoms legitimately pin neighbouring
+            # quantiles to the same t; a tiny slack absorbs inversion noise
+            assert t0 <= t1 * (1.0 + 1e-9), (method, q0, q1, t0, t1)
+
+    @given(_SMOOTH_TANDEM)
+    @settings(max_examples=25, deadline=None)
+    def test_cdf_monotone_in_t(self, params):
+        sts = _stations(params)
+        mean = T.sojourn_mean(sts)
+        t = np.linspace(0.1 * mean, 8.0 * mean, 24)
+        cdf = np.asarray(T.sojourn_cdf(sts, t))
+        assert np.all(np.diff(cdf) >= -1e-9)
+        assert np.all((cdf >= 0.0) & (cdf <= 1.0))
+
+
+# ---------------------------------------------------------------------------
+# round-trip: quantile is the inverse of the CDF it was solved against
+# ---------------------------------------------------------------------------
+
+
+class TestRoundTrip:
+    @given(_SMOOTH_TANDEM, _Q)
+    @settings(max_examples=40, deadline=None)
+    def test_cdf_of_quantile_recovers_q(self, params, q):
+        sts = _stations(params)
+        t = T.sojourn_quantile(sts, q, method="euler")
+        assert math.isfinite(t) and t > 0.0
+        assert abs(float(T.sojourn_cdf(sts, t)) - q) <= 1e-6, (q, t)
+
+    @given(_SMOOTH_TANDEM, _Q)
+    @settings(max_examples=25, deadline=None)
+    def test_pdf_is_cdf_derivative(self, params, q):
+        """The free density the Newton phase steers by must actually be the
+        CDF's derivative — central difference to ~1e-3, far tighter than
+        anything the safeguarded step needs."""
+        sts = _stations(params)
+        t = T.sojourn_quantile(sts, q, method="euler")
+        pdf = float(T.sojourn_pdf(sts, t))
+        h = 1e-5 * t
+        fd = float((T.sojourn_cdf(sts, t + h) - T.sojourn_cdf(sts, t - h)) / (2 * h))
+        assert pdf >= 0.0
+        assert pdf == pytest.approx(fd, rel=1e-3, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# the EULER_Q_MAX handoff
+# ---------------------------------------------------------------------------
+
+
+class TestEulerAsymptoteHandoff:
+    def test_resolution_flips_exactly_past_q_max(self):
+        qmax = T.EULER_Q_MAX
+        assert T.resolve_tail_method(qmax, "euler") == "euler"
+        assert T.resolve_tail_method(math.nextafter(qmax, 1.0), "euler") == \
+            "asymptote"
+        # asymptote never re-routes
+        assert T.resolve_tail_method(0.5, "asymptote") == "asymptote"
+
+    @given(_SMOOTH_TANDEM)
+    @settings(max_examples=25, deadline=None)
+    def test_handoff_is_cdf_consistent(self, params):
+        """At the boundary quantile the euler answer must still sit within a
+        couple of survival widths of q in CDF space — the noise floor is ~1%
+        of the surviving mass there, which is exactly why EULER_Q_MAX is
+        where it is."""
+        sts = _stations(params)
+        qmax = T.EULER_Q_MAX
+        t = T.sojourn_quantile(sts, qmax, method="euler")
+        assert abs(float(T.sojourn_cdf(sts, t)) - qmax) <= 2.0 * (1.0 - qmax)
+
+    @given(st.lists(st.tuples(st.floats(0.5, 50.0), st.floats(0.05, 0.9)),
+                    min_size=2, max_size=3))
+    @settings(max_examples=25, deadline=None)
+    def test_handoff_jump_small_for_exponential_tandems(self, pairs):
+        """Crossing EULER_Q_MAX swaps engines mid-curve; for exponential
+        tandems (no atoms, asymptote near-exact) the jump is bounded by the
+        inversion noise x log-slope — a few percent, empirically <= 6%."""
+        sts = [T.proc_station(rho * mu, T.KIND_EXP, 1.0 / mu, 0.0, 1.0)
+               for mu, rho in pairs]
+        qmax = T.EULER_Q_MAX
+        e = T.sojourn_quantile(sts, qmax, method="euler")
+        a = T.sojourn_quantile(sts, qmax, method="asymptote")
+        assert abs(e - a) / a <= 0.10, (e, a)
+
+
+# ---------------------------------------------------------------------------
+# mean-derived envelope
+# ---------------------------------------------------------------------------
+
+
+class TestMeanEnvelope:
+    @given(_TANDEM)
+    @settings(max_examples=40, deadline=None)
+    def test_p99_p50_mean_chain(self, params):
+        """0 < p50 <= p99, both under the Markov bound t_q <= mean/(1-q),
+        and p99 above the deterministic service floor — every piece derived
+        from the same mean the closed forms report."""
+        sts = _stations(params)
+        mean = T.sojourn_mean(sts)
+        assert math.isfinite(mean) and mean > 0.0
+        p50 = T.sojourn_quantile(sts, 0.5, method="euler")
+        p99 = T.sojourn_quantile(sts, 0.99, method="euler")
+        assert 0.0 < p50 <= p99 * (1.0 + 1e-9)
+        assert p50 <= mean / 0.5 * (1.0 + 1e-6)
+        assert p99 <= mean / 0.01 * (1.0 + 1e-6)
+        floor = sum(1.0 / mu for mu, _, kind, _ in params if kind == T.KIND_DET)
+        assert p99 >= floor * (1.0 - 1e-6)
+
+    @given(_TANDEM)
+    @settings(max_examples=25, deadline=None)
+    def test_asymptote_obeys_same_envelope(self, params):
+        sts = _stations(params)
+        mean = T.sojourn_mean(sts)
+        p50 = T.sojourn_quantile(sts, 0.5, method="asymptote")
+        p99 = T.sojourn_quantile(sts, 0.99, method="asymptote")
+        assert 0.0 < p50 <= p99 * (1.0 + 1e-9)
+        assert p99 <= mean / 0.01 * (1.0 + 1e-6)

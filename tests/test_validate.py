@@ -200,6 +200,10 @@ class TestDifferentialSmoke:
         assert rep.golden_max_rel_err <= 1e-9
         assert rep.passed  # MAPE gate is vacuous without simulation
         assert all(r.vec_rel_err <= 1e-6 for r in rep.entries)
+        # the batched exact euler inversion agrees with the scalar one to
+        # 1e-8 on every rho <= 0.95 entry even in the analytic-only run
+        assert rep.euler_vec_n >= 30
+        assert rep.euler_vec_max_rel_err <= 1e-8, rep.euler_vec_max_rel_err
 
     def test_smoke_gate(self, corpus):
         """The fast subset meets the paper-style budget with short runs."""
@@ -283,6 +287,11 @@ class TestFullGate:
         assert rep.tail.n >= 20
         assert rep.tail.mean_pct <= 10.0, rep.tail
         assert rep.tail_vec_max_rel_err <= 1e-6
+        # tail-euler-vec gate (ISSUE 8): the batched exact p99 reproduces the
+        # scalar euler inversion to <= 1e-8 on every entry at rho <= 0.95
+        assert rep.euler_vec_n >= 30
+        assert rep.euler_vec_max_rel_err <= 1e-8, rep.euler_vec_max_rel_err
+        assert rep.euler_vec_passed
         assert rep.passed
         # every simulated entry got a CI; gated entries resolve their own error
         for r in rep.entries:
