@@ -57,6 +57,16 @@ HEADLINES: dict[str, dict[str, tuple[str, float | None, bool]]] = {
     "BENCH_validate.json": {
         "smoke_gate_mean_mape_pct": ("lower", None, False),
     },
+    "BENCH_meanfield.json": {
+        "diurnal.client_epochs_per_sec": ("higher", 0.45, True),
+        # deterministic model headlines: the diurnal day's fleet mean and the
+        # fixed-point iteration count must not creep; any saturated
+        # class-epoch at all is a model drift (the day is sized stable)
+        "diurnal.mean_latency_s": ("lower", None, False),
+        "diurnal.saturated_epochs": ("lower", 0.0, False),
+        "equilibrium.iterations": ("lower", None, False),
+        "cross_check.gated_max_mape_pct": ("lower", None, False),
+    },
     "BENCH_tail.json": {
         "vec_euler_rows_per_sec": ("higher", 0.45, True),
         "euler_vec_rows_per_s": ("higher", 0.45, True),
@@ -106,6 +116,8 @@ HEADLINES: dict[str, dict[str, tuple[str, float | None, bool]]] = {
         "ssm_scan.max_abs_err": ("lower", 9.0, False),
         "rmsnorm.max_abs_err": ("lower", 9.0, False),
         "lindley_scan.max_abs_err": ("lower", 9.0, False),
+        # integer choice trajectories: any mismatch at all is a drift
+        "decision_scan.max_abs_err": ("lower", 0.0, False),
     },
 }
 

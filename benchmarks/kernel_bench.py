@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.decision_scan.ops import decision_scan
 from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.lindley_scan.ops import lindley_scan
@@ -85,6 +86,15 @@ def kernel_rows(out_dir: Path | None = None) -> dict:
     ref, us = timed(lambda: jax.block_until_ready(lindley_scan(arr, svc, impl="xla")))
     out = lindley_scan(arr, svc, impl="interpret", blk_b=8, blk_t=256)
     record("lindley_scan", us, _err(out, ref))
+
+    # decision scan (the cluster simulator's per-epoch staggered decide step)
+    costs = jnp.asarray(rng.exponential(0.05, (256, 16, 5)), jnp.float32)
+    coh = jnp.asarray(np.arange(16) % 4, jnp.int32)
+    ref, us = timed(lambda: jax.block_until_ready(
+        decision_scan(costs, coh, hysteresis=0.15, stagger=4, impl="xla")))
+    out = decision_scan(costs, coh, hysteresis=0.15, stagger=4,
+                        impl="interpret", blk_n=8, blk_t=64)
+    record("decision_scan", us, _err(out, ref))
 
     if out_dir is not None:
         (out_dir / "BENCH_kernels.json").write_text(json.dumps(report, indent=2))

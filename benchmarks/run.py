@@ -8,6 +8,8 @@ JSON artifact under ``--out``:
   * ``fleet``         -> BENCH_fleet.json (scalar-vs-vectorized throughput)
   * ``cluster``       -> BENCH_cluster.json (closed-loop client-epochs/s +
                          equilibrium iterations)
+  * ``meanfield``     -> BENCH_meanfield.json (million-client diurnal-day
+                         throughput + mean-field-vs-exact gated MAPE)
   * ``validate``      -> BENCH_validate.json (fidelity-gate cost + headline MAPE)
   * ``tail``          -> BENCH_tail.json (sojourn-quantile throughput +
                          asymptote-vs-Euler gap + station_pass speedup)
@@ -87,6 +89,12 @@ def run_cluster(out_dir: Path) -> dict:
     return cluster_rows(out_dir)
 
 
+def run_meanfield(out_dir: Path) -> dict:
+    from .meanfield_bench import meanfield_rows
+
+    return meanfield_rows(out_dir)
+
+
 def run_validate(out_dir: Path) -> dict:
     from .validate_bench import validate_rows
 
@@ -126,6 +134,7 @@ BENCHES = {
     "kernels": run_kernels,
     "fleet": run_fleet,
     "cluster": run_cluster,
+    "meanfield": run_meanfield,
     "validate": run_validate,
     "tail": run_tail,
     "measure": run_measure,
@@ -152,20 +161,29 @@ def main(argv=None) -> int:
     # name exits nonzero with the registry listed — and stays that way as
     # the registry grows, instead of silently running nothing
     ap.add_argument("--only", action="append", metavar="FAMILY",
-                    help="run only these bench families (repeatable; default all; "
+                    help="run only these bench families (repeatable and/or "
+                         "comma-separated; default all; "
                          f"known: {', '.join(sorted(BENCHES))})")
     ap.add_argument("--out", type=Path, default=Path("experiments/bench"),
                     help="directory for JSON artifacts")
     args = ap.parse_args(argv)
 
-    unknown = [n for n in (args.only or []) if n not in BENCHES]
+    # accept --only a,b alongside repeated --only a --only b; empty segments
+    # from stray commas are dropped so "a,,b" and "a," don't become families
+    selected = [n.strip() for item in (args.only or [])
+                for n in item.split(",") if n.strip()]
+    if args.only and not selected:
+        print(f"error: --only given but no family names parsed "
+              f"(known: {', '.join(sorted(BENCHES))})", file=sys.stderr)
+        return 2
+    unknown = [n for n in selected if n not in BENCHES]
     if unknown:
         print(f"error: unknown bench famil{'y' if len(unknown) == 1 else 'ies'} "
               f"{', '.join(repr(n) for n in unknown)} "
               f"(known: {', '.join(sorted(BENCHES))})", file=sys.stderr)
         return 2
 
-    names = args.only or list(BENCHES)
+    names = selected or list(BENCHES)
     args.out.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     for name in names:

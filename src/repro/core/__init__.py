@@ -40,8 +40,10 @@ from .multitenant import (
     multitenant_edge_latency,
 )
 from .scenario import (
+    ClientClass,
     ClusterSpec,
     EdgeSpec,
+    MeanFieldSpec,
     Scenario,
     ScenarioError,
     ScenarioPrediction,

@@ -62,6 +62,8 @@ __all__ = [
     "EdgeSpec",
     "Scenario",
     "ClusterSpec",
+    "ClientClass",
+    "MeanFieldSpec",
     "ScenarioPrediction",
     "analytic",
     "analytic_tail",
@@ -586,6 +588,224 @@ class ClusterSpec:
             n_clients=int(n_clients),
             arrival_scale=tuple(float(s) for s in d.get("arrival_scale", [])),
             name=d.get("name", "cluster"),
+        )
+
+
+# ---------------------------------------------------------------------------
+# ClientClass / MeanFieldSpec: client-*class* aggregation for mean-field scale
+# ---------------------------------------------------------------------------
+
+
+def _tier_to_dict(t: Tier) -> dict:
+    return {
+        "name": t.name,
+        "service_time_s": t.service_time_s,
+        "parallelism_k": t.parallelism_k,
+        "service_model": t.service_model.value,
+        "service_var": t.service_var,
+    }
+
+
+def _tier_from_dict(td: Mapping, path: str) -> Tier:
+    try:
+        s = td["service_time_s"]
+    except (KeyError, TypeError):
+        raise ScenarioError(f"{path}.service_time_s", "missing required field") \
+            from None
+    return Tier(
+        name=td.get("name", "tier"),
+        service_time_s=s,
+        parallelism_k=td.get("parallelism_k", 1.0),
+        service_model=_coerce_model(td.get("service_model", "md1"),
+                                    f"{path}.service_model"),
+        service_var=td.get("service_var", 0.0),
+    )
+
+
+@dataclass(frozen=True)
+class ClientClass:
+    """One homogeneous cohort of a mean-field fleet.
+
+    A class is a (device tier, arrival-rate band, bandwidth-trace band)
+    bucket: ``n_clients`` statistically identical clients whose arrival rate
+    is ``arrival_scale`` x the base workload rate, whose shared-path
+    bandwidth is ``bandwidth_scale`` x the base network path (the
+    "bandwidth-trace class" — well-connected vs cellular cohorts), and whose
+    device tier is ``device`` (``None`` = the base scenario's device). The
+    mean-field layer evolves one offload-fraction row per class instead of
+    one decision per client, which is what takes the closed loop from tens
+    of clients to millions.
+    """
+
+    n_clients: int
+    arrival_scale: float = 1.0
+    bandwidth_scale: float = 1.0
+    device: Tier | None = None
+    name: str = "class"
+
+    def __post_init__(self):
+        _require(
+            isinstance(self.n_clients, (int, np.integer))
+            and not isinstance(self.n_clients, bool)
+            and self.n_clients >= 1,
+            "n_clients", f"must be a positive integer, got {self.n_clients!r}")
+        for field_name in ("arrival_scale", "bandwidth_scale"):
+            v = getattr(self, field_name)
+            _require(bool(np.isfinite(v)) and v > 0, field_name,
+                     f"must be positive and finite, got {v!r}")
+        if self.device is not None:
+            coerced = _validate_tier(self.device, "device")
+            if coerced is not self.device:
+                object.__setattr__(self, "device", coerced)
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "n_clients": int(self.n_clients),
+            "arrival_scale": float(self.arrival_scale),
+            "bandwidth_scale": float(self.bandwidth_scale),
+            "device": None if self.device is None else _tier_to_dict(self.device),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping, path: str = "classes[?]") -> "ClientClass":
+        try:
+            n = d["n_clients"]
+        except (KeyError, TypeError):
+            raise ScenarioError(f"{path}.n_clients", "missing required field") \
+                from None
+        dev = d.get("device")
+        return cls(
+            n_clients=int(n),
+            arrival_scale=float(d.get("arrival_scale", 1.0)),
+            bandwidth_scale=float(d.get("bandwidth_scale", 1.0)),
+            device=None if dev is None else _tier_from_dict(dev, f"{path}.device"),
+            name=d.get("name", "class"),
+        )
+
+
+@dataclass(frozen=True)
+class MeanFieldSpec:
+    """A fleet described by client *classes* instead of individual clients.
+
+    ``base`` is the shared template exactly as in :class:`ClusterSpec` (its
+    ``edges`` are the shared pool every class may offload to); ``classes``
+    partition the fleet into homogeneous cohorts. The mean-field semantics —
+    per-class offload fractions whose rate-weighted sum is the endogenous
+    edge load — live in :mod:`repro.fleet.meanfield`; this spec is the
+    validated, serialisable description they consume.
+
+    For small fleets the spec expands to the exact per-client
+    :class:`ClusterSpec` via :meth:`to_cluster`, which is what the
+    mean-field-vs-exact validation gate runs on.
+    """
+
+    base: Scenario
+    classes: tuple[ClientClass, ...] = ()
+    name: str = "meanfield"
+
+    def __post_init__(self):
+        if not isinstance(self.classes, tuple):
+            object.__setattr__(self, "classes", tuple(self.classes))
+        _require(isinstance(self.base, Scenario), "base",
+                 f"expected a Scenario, got {type(self.base).__name__}")
+        _require(bool(self.base.edges), "base.edges",
+                 "a mean-field fleet needs at least one shared edge server")
+        _require(bool(self.classes), "classes",
+                 "a mean-field fleet needs at least one client class")
+        for i, c in enumerate(self.classes):
+            _require(isinstance(c, ClientClass), f"classes[{i}]",
+                     f"expected a ClientClass, got {type(c).__name__}")
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.classes)
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.base.edges)
+
+    @property
+    def n_total(self) -> int:
+        """Total clients across all classes (the fleet the fractions model)."""
+        return int(sum(c.n_clients for c in self.classes))
+
+    def class_counts(self) -> np.ndarray:
+        """(C,) clients per class."""
+        return np.array([c.n_clients for c in self.classes], dtype=np.float64)
+
+    def arrival_rates(self) -> np.ndarray:
+        """(C,) per-client true arrival rate of each class."""
+        return self.base.workload.arrival_rate * np.array(
+            [c.arrival_scale for c in self.classes], dtype=np.float64)
+
+    def bandwidth_Bps(self, base_Bps: float | None = None) -> np.ndarray:
+        """(C,) per-client shared-path bandwidth of each class — the base
+        network path (or an override, e.g. one epoch of a trace) times each
+        class's ``bandwidth_scale``."""
+        b = float(np.asarray(self.base.network.bandwidth_Bps)) \
+            if base_Bps is None else float(base_Bps)
+        return b * np.array(
+            [c.bandwidth_scale for c in self.classes], dtype=np.float64)
+
+    def device_tier(self, c: int) -> Tier:
+        """Class ``c``'s device tier (its override, or the base device)."""
+        cl = self.classes[c]
+        return self.base.device if cl.device is None else cl.device
+
+    def class_index(self) -> np.ndarray:
+        """(n_total,) expanded client -> class map, class-major order —
+        matches :meth:`to_cluster`'s client ordering."""
+        return np.repeat(np.arange(self.n_classes),
+                         [c.n_clients for c in self.classes])
+
+    def to_cluster(self) -> ClusterSpec:
+        """The exact per-client :class:`ClusterSpec` this spec aggregates.
+
+        Clients are laid out class-major (all of class 0, then class 1, ...,
+        matching :meth:`class_index`). Per-class ``bandwidth_scale`` expands
+        through :meth:`bandwidth_Bps` as a per-client array override to
+        ``solve_equilibrium``; per-class ``device`` overrides cannot be
+        expressed in a single-device-tier :class:`ClusterSpec` and are
+        refused loudly rather than silently dropped.
+        """
+        for i, c in enumerate(self.classes):
+            _require(c.device is None or c.device == self.base.device,
+                     f"classes[{i}].device",
+                     "per-class device tiers have no exact ClusterSpec "
+                     "equivalent (the exact solver models one shared device "
+                     "tier); compare such specs analytically instead")
+        scale = np.repeat([c.arrival_scale for c in self.classes],
+                          [c.n_clients for c in self.classes])
+        return ClusterSpec(
+            base=self.base,
+            n_clients=self.n_total,
+            arrival_scale=tuple(float(s) for s in scale),
+            name=f"{self.name}-exact",
+        )
+
+    def to_dict(self) -> dict:
+        """Plain-JSON dict; ``from_dict(to_dict(spec)) == spec``."""
+        return {
+            "name": self.name,
+            "base": self.base.to_dict(),
+            "classes": [c.to_dict() for c in self.classes],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "MeanFieldSpec":
+        try:
+            base = d["base"]
+            classes = d["classes"]
+        except (KeyError, TypeError):
+            missing = "base" if not isinstance(d, Mapping) or "base" not in d \
+                else "classes"
+            raise ScenarioError(missing, "missing required field") from None
+        return cls(
+            base=Scenario.from_dict(base),
+            classes=tuple(ClientClass.from_dict(cd, f"classes[{i}]")
+                          for i, cd in enumerate(classes)),
+            name=d.get("name", "meanfield"),
         )
 
 

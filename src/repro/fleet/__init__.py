@@ -40,7 +40,20 @@ from .cluster import (
     simulate_cluster,
     solve_equilibrium,
 )
-from .policy import bg_template, clamp_saturation, parse_policy, true_latency
+from .meanfield import (
+    MeanFieldEquilibrium,
+    MeanFieldResult,
+    cross_check_meanfield,
+    simulate_meanfield,
+    solve_meanfield_equilibrium,
+)
+from .policy import (
+    bg_template,
+    clamp_saturation,
+    parse_policy,
+    static_fractions,
+    true_latency,
+)
 from .replay import PolicyResult, ReplayResult, replay
 from .sim_vec import FleetSimResult, lindley_station, simulate_fleet
 from .tail_vec import FleetTailPrediction, fleet_tail

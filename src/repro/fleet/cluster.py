@@ -389,17 +389,43 @@ def predict_terms(
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("window", "stagger", "slo_q", "tail_method"))
-def _closed_loop_scan(cst, bw_true, lam_true, exo_true, *, window: int,
-                      stagger: int, dt, bw_alpha, bg_alpha, hysteresis, seed,
-                      slo_q: float | None = None, tail_method: str = "asymptote"):
-    """Decisions/estimates/loads of the adaptive policy over all T epochs.
+@jax.jit
+def _poisson_counts(seed, lam_true, dt):
+    """Per-epoch Poisson arrival counts (T, N), hoisted out of the decision
+    scan. Replicates the scan's original in-carry key chain step for step
+    (``key, kp = split(key); poisson(kp, lam_t * dt)``) so the draws are
+    bitwise identical to what the pre-hoist closed loop sampled — which is
+    what lets the sharded scans consume the SAME counts as the flat one and
+    stay exact, and lets padding happen after sampling without perturbing the
+    real clients' draws."""
+
+    def chain(key, lam_t):
+        key, kp = jax.random.split(key)
+        return key, jax.random.poisson(kp, lam_t * dt).astype(jnp.float64)
+
+    _, n_req = jax.lax.scan(chain, jax.random.PRNGKey(seed), lam_true)
+    return n_req
+
+
+def _scan_epochs(cst, lam_spec, cohort, bw_true, lam_true, exo_true, n_req_all,
+                 *, window: int, stagger: int, dt, bw_alpha, bg_alpha,
+                 hysteresis, slo_q: float | None = None,
+                 tail_method: str = "asymptote", axis_name: str | None = None):
+    """The closed decision loop over THIS shard's clients: one ``lax.scan``
+    over epochs.
 
     Carry: per-client EWMA bandwidth, the sliding-window ring of per-epoch
-    Poisson arrival counts, per-client EWMA estimates of the *other* clients'
+    Poisson arrival counts (pre-drawn by :func:`_poisson_counts` and fed in
+    as scan inputs), per-client EWMA estimates of the *other* clients'
     per-edge load (fed by last epoch's reports — the closed loop's one-epoch
-    information lag), the shared EWMA exogenous-load estimate, the previous
-    decision (hysteresis), and the PRNG key.
+    information lag), the shared EWMA exogenous-load estimate, and the
+    previous decision (hysteresis).
+
+    Within an epoch every per-client quantity is elementwise in the client
+    axis; the ONLY cross-client coupling is the endogenous-load total, so
+    with ``axis_name`` set the same body runs on a block of clients under
+    ``shard_map`` (or ``vmap`` on one device) and a single ``lax.psum``
+    restores the fleet-wide sum — blocking is exact, not approximate.
 
     ``stagger`` desynchronizes the control epochs: client i re-decides only
     on epochs where ``t % stagger == i % stagger`` and holds its previous
@@ -412,22 +438,19 @@ def _closed_loop_scan(cst, bw_true, lam_true, exo_true, *, window: int,
     """
     t_n, n = lam_true.shape
     e_n = exo_true.shape[1]
-    cohort = jnp.mod(jnp.arange(n), stagger)
 
     def step(carry, inputs):
-        key, est_bw, counts, est_endo, est_exo, prev_choice = carry
-        bw_t, lam_t, exo_t, idx = inputs
+        est_bw, counts, est_endo, est_exo, prev_choice = carry
+        bw_t, lam_t, exo_t, n_req, idx = inputs
         first = idx == 0
 
         # -- telemetry (§4.2): estimators, never raw instantaneous values --
         est_bw = jnp.where(first, bw_t, bw_alpha * bw_t + (1 - bw_alpha) * est_bw)
         est_exo = jnp.where(first, exo_t, bg_alpha * exo_t + (1 - bg_alpha) * est_exo)
-        key, kp = jax.random.split(key)
-        n_req = jax.random.poisson(kp, lam_t * dt).astype(jnp.float64)
         counts = jax.lax.dynamic_update_slice(
             counts, n_req[:, None], (0, jnp.mod(idx, window)))
         rate = counts.sum(axis=1) / (window * dt)
-        lam_hat = jnp.where(rate > 0, rate, cst["lam_spec"])
+        lam_hat = jnp.where(rate > 0, rate, lam_spec)
 
         # -- Algorithm 1 on the estimated state (mean or SLO-quantile) -----
         bg_lam, bg_wsum, bg_ssum = _bg_moments(cst, est_endo, est_exo[None, :])
@@ -447,25 +470,126 @@ def _closed_loop_scan(cst, bw_true, lam_true, exo_true, *, window: int,
 
         # -- the loop closes: decisions become next epoch's edge loads -----
         off = (choice[:, None] == jnp.arange(e_n)[None, :])
-        endo_total = jnp.sum(jnp.where(off, lam_t[:, None], 0.0), axis=0)
-        report = endo_total[None, :] - jnp.where(off, lam_t[:, None], 0.0)
+        own = jnp.where(off, lam_t[:, None], 0.0)
+        local = jnp.sum(own, axis=0)
+        endo_total = local if axis_name is None else jax.lax.psum(local, axis_name)
+        report = endo_total[None, :] - own
         est_endo_next = jnp.where(
             first, report, bg_alpha * report + (1 - bg_alpha) * est_endo)
 
         out = (choice, endo_total, est_bw, lam_hat, est_endo, est_exo)
-        return (key, est_bw, counts, est_endo_next, est_exo, choice), out
+        return (est_bw, counts, est_endo_next, est_exo, choice), out
 
     init = (
-        jax.random.PRNGKey(seed),
         jnp.zeros(n),
         jnp.zeros((n, window)),
         jnp.zeros((n, e_n)),
         jnp.zeros(e_n),
         jnp.full(n, ON_DEVICE, dtype=jnp.int32),
     )
-    inputs = (bw_true, lam_true, exo_true, jnp.arange(t_n))
+    inputs = (bw_true, lam_true, exo_true, n_req_all, jnp.arange(t_n))
     _, outs = jax.lax.scan(step, init, inputs)
     return outs
+
+
+@partial(jax.jit, static_argnames=("window", "stagger", "slo_q", "tail_method"))
+def _closed_loop_scan(cst, bw_true, lam_true, exo_true, n_req, *, window: int,
+                      stagger: int, dt, bw_alpha, bg_alpha, hysteresis,
+                      slo_q: float | None = None, tail_method: str = "asymptote"):
+    """Decisions/estimates/loads of the adaptive policy over all T epochs —
+    :func:`_scan_epochs` over the whole fleet as one block."""
+    n = lam_true.shape[1]
+    cohort = jnp.mod(jnp.arange(n), stagger)
+    return _scan_epochs(
+        cst, cst["lam_spec"], cohort, bw_true, lam_true, exo_true, n_req,
+        window=window, stagger=stagger, dt=dt, bw_alpha=bw_alpha,
+        bg_alpha=bg_alpha, hysteresis=hysteresis, slo_q=slo_q,
+        tail_method=tail_method)
+
+
+@partial(jax.jit,
+         static_argnames=("window", "stagger", "shards", "slo_q", "tail_method"))
+def _closed_loop_scan_blocked(cst, bw_true, lam_true, exo_true, n_req, *,
+                              window: int, stagger: int, shards: int, dt,
+                              bw_alpha, bg_alpha, hysteresis,
+                              slo_q: float | None = None,
+                              tail_method: str = "asymptote"):
+    """Single-host sharded twin of :func:`_closed_loop_scan`: clients split
+    into ``shards`` equal blocks, :func:`_scan_epochs` vmapped over the block
+    axis with the endogenous total restored by ``psum`` over the vmap axis.
+    Numerically identical math, the load sum merely re-associated — this is
+    the fallback (and the exactness oracle) for the ``shard_map`` path when
+    fewer than ``shards`` devices exist."""
+    t_n, n = lam_true.shape
+    nb = n // shards
+
+    def blocks(a):  # (T, N, ...) -> (B, T, nb, ...) per-shard leading axis
+        return jnp.moveaxis(a.reshape(t_n, shards, nb, *a.shape[2:]), 1, 0)
+
+    cohort = jnp.mod(jnp.arange(n), stagger).reshape(shards, nb)
+    lam_spec = cst["lam_spec"].reshape(shards, nb)
+    run = partial(_scan_epochs, window=window, stagger=stagger, dt=dt,
+                  bw_alpha=bw_alpha, bg_alpha=bg_alpha, hysteresis=hysteresis,
+                  slo_q=slo_q, tail_method=tail_method, axis_name="shards")
+    choice, endo_total, est_bw, lam_hat, est_endo, est_exo = jax.vmap(
+        run, in_axes=(None, 0, 0, 0, 0, None, 0), axis_name="shards")(
+        cst, lam_spec, cohort, blocks(bw_true), blocks(lam_true), exo_true,
+        blocks(n_req))
+
+    def merge(a):  # (B, T, nb, ...) -> (T, N, ...)
+        return jnp.moveaxis(a, 0, 1).reshape(t_n, n, *a.shape[3:])
+
+    # psum makes the shared outputs identical on every shard — keep shard 0
+    return (merge(choice), endo_total[0], merge(est_bw), merge(lam_hat),
+            merge(est_endo), est_exo[0])
+
+
+def _closed_loop_scan_shardmap(cst, bw_true, lam_true, exo_true, n_req, *,
+                               window: int, stagger: int, shards: int, dt,
+                               bw_alpha, bg_alpha, hysteresis,
+                               slo_q: float | None = None,
+                               tail_method: str = "asymptote"):
+    """Multi-device sharded twin of :func:`_closed_loop_scan`: client blocks
+    placed one per device via ``shard_map``, with the endogenous-load total
+    as the only cross-device collective per epoch. Same math as
+    ``_closed_loop_scan_blocked`` (its single-host oracle) — the decision
+    loop is embarrassingly parallel in clients given lagged load reports."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    n = lam_true.shape[1]
+    mesh = Mesh(np.array(jax.devices()[:shards]), ("shards",))
+    cohort = jnp.mod(jnp.arange(n), stagger)
+    run = partial(_scan_epochs, window=window, stagger=stagger, dt=dt,
+                  bw_alpha=bw_alpha, bg_alpha=bg_alpha, hysteresis=hysteresis,
+                  slo_q=slo_q, tail_method=tail_method, axis_name="shards")
+    cols = P(None, "shards")
+    fn = shard_map(
+        run, mesh=mesh,
+        in_specs=(P(), P("shards"), P("shards"), cols, cols, P(), cols),
+        out_specs=(cols, P(), cols, cols, P(None, "shards", None), P()),
+        check_rep=False)
+    return jax.jit(fn)(cst, cst["lam_spec"], cohort, bw_true, lam_true,
+                       exo_true, n_req)
+
+
+def _pad_clients(cst, bw_true, lam_true, n_req, pad: int):
+    """Append ``pad`` inert dummy clients so the client axis splits evenly
+    into shards. A dummy has TRUE arrival rate 0 — zero pre-drawn counts and
+    zero contribution to every endogenous sum — so its presence is exact, not
+    approximate; its spec-rate fallback is a harmless 1 rps (its decisions
+    are computed and discarded). Padding happens AFTER Poisson sampling, so
+    real clients' draws are untouched."""
+    if pad == 0:
+        return cst, bw_true, lam_true, n_req
+    cst = dict(cst)
+    cst["lam_spec"] = jnp.concatenate([cst["lam_spec"], jnp.ones(pad)])
+
+    def padcols(a, fill):
+        return jnp.concatenate(
+            [a, jnp.full((a.shape[0], pad), fill, dtype=a.dtype)], axis=1)
+
+    return cst, padcols(bw_true, 1.0), padcols(lam_true, 0.0), padcols(n_req, 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -625,6 +749,7 @@ def simulate_cluster(
     saturation_penalty_s: float = 30.0,
     hysteresis: float = 0.0,
     stagger: int = 1,
+    shards: int = 1,
     slo_quantile: float | None = None,
     tail_method: str = "asymptote",
     tracer=None,
@@ -643,8 +768,19 @@ def simulate_cluster(
     is then scored under the TRUE conditions with one batched
     ``analytic_vec`` call over all T*N client-epochs, with the same bounded
     saturation penalty the scalar replay applies. ``stagger`` spreads
-    clients over k staggered decision cohorts (see ``_closed_loop_scan``);
-    leave it at 1 for fully synchronous control."""
+    clients over k staggered decision cohorts (see ``_scan_epochs``);
+    leave it at 1 for fully synchronous control.
+
+    ``shards`` splits the client axis into that many blocks for the decision
+    scan — one block per device via ``shard_map`` when enough JAX devices
+    exist, otherwise a vmapped single-host blocking. Decisions within an
+    epoch depend only on lagged load reports, so the split is EXACT: the
+    one cross-client quantity (the endogenous per-edge load total) is
+    restored by a per-epoch ``psum``, and Poisson arrival counts are drawn
+    once, before blocking, from the same seed-keyed chain the unsharded scan
+    uses. Results match ``shards=1`` decision-for-decision (float outputs to
+    reduction-reassociation tolerance). Clients are padded with inert
+    zero-rate dummies when ``shards`` does not divide N."""
     if isinstance(traces, Trace):
         traces = TraceBatch.from_trace(traces, spec.n_clients)
     if traces.n_clients != spec.n_clients:
@@ -659,6 +795,8 @@ def simulate_cluster(
         raise ValueError("rate_window_epochs must be >= 1")
     if not 1 <= stagger <= spec.n_clients:
         raise ValueError(f"stagger must be in [1, n_clients], got {stagger}")
+    if not 1 <= shards <= spec.n_clients:
+        raise ValueError(f"shards must be in [1, n_clients], got {shards}")
     if slo_quantile is not None and not 0.0 < slo_quantile < 1.0:
         raise ValueError(f"slo_quantile must be in (0, 1), got {slo_quantile}")
     if slo_quantile is not None:
@@ -684,18 +822,34 @@ def simulate_cluster(
         results: dict[str, ClusterPolicyResult] = {}
         est_bw = est_lam = est_endo = est_exo = None
         if "adaptive" in policies:
-            choice, _loads, bw_e, lam_e, endo_e, exo_e = _closed_loop_scan(
-                cst_j, bw_j, lam_j, exo_j,
+            n_req = _poisson_counts(seed, lam_j, jnp.float64(traces.epoch_s))
+            scan_kw = dict(
                 window=int(rate_window_epochs),
                 stagger=int(stagger),
                 dt=jnp.float64(traces.epoch_s),
                 bw_alpha=jnp.float64(bw_alpha),
                 bg_alpha=jnp.float64(bg_alpha),
                 hysteresis=jnp.float64(hysteresis),
-                seed=seed,
                 slo_q=slo_quantile,
                 tail_method=tail_method,
             )
+            if shards == 1:
+                outs = _closed_loop_scan(cst_j, bw_j, lam_j, exo_j, n_req,
+                                         **scan_kw)
+            else:
+                pad = (-spec.n_clients) % shards
+                cst_p, bw_p, lam_p, nreq_p = _pad_clients(
+                    cst_j, bw_j, lam_j, n_req, pad)
+                scan = (_closed_loop_scan_shardmap
+                        if len(jax.devices()) >= shards
+                        else _closed_loop_scan_blocked)
+                outs = scan(cst_p, bw_p, lam_p, exo_j, nreq_p,
+                            shards=int(shards), **scan_kw)
+                if pad:
+                    keep = spec.n_clients
+                    outs = (outs[0][:, :keep], outs[1], outs[2][:, :keep],
+                            outs[3][:, :keep], outs[4][:, :keep], outs[5])
+            choice, _loads, bw_e, lam_e, endo_e, exo_e = outs
             choices = np.asarray(choice)
             est_bw, est_lam = np.asarray(bw_e), np.asarray(lam_e)
             est_endo, est_exo = np.asarray(endo_e), np.asarray(exo_e)

@@ -35,7 +35,8 @@ from repro.core.scenario import (
 )
 from repro.core.tail import mixture_station, offload_stations, sojourn_quantile
 
-__all__ = ["parse_policy", "bg_template", "true_latency", "clamp_saturation"]
+__all__ = ["parse_policy", "bg_template", "static_fractions", "true_latency",
+           "clamp_saturation"]
 
 
 def parse_policy(name: str, n_edges: int) -> int:
@@ -48,6 +49,22 @@ def parse_policy(name: str, n_edges: int) -> int:
         return parse_strategy(name, n_edges)
     except ScenarioError as err:
         raise ScenarioError("policies", str(err)) from None
+
+
+def static_fractions(name: str, n_classes: int, n_edges: int) -> np.ndarray:
+    """(C, E+1) mean-field fraction matrix of an all-clients static policy.
+
+    Column 0 is on-device and column ``j + 1`` is edge ``j`` — the layout
+    :mod:`repro.fleet.meanfield` uses for every fraction state. Each class
+    puts its whole mass on the parsed target, so the matrix is the state a
+    fleet pinned to ``name`` occupies; labels parse (and fail) exactly like
+    replay and cluster policies."""
+    if n_classes < 1:
+        raise ValueError(f"n_classes must be positive, got {n_classes}")
+    target = parse_policy(name, n_edges)
+    f = np.zeros((n_classes, n_edges + 1), dtype=np.float64)
+    f[:, 0 if target == ON_DEVICE else target + 1] = 1.0
+    return f
 
 
 def bg_template(scn: Scenario, j: int) -> tuple[float, float, float]:

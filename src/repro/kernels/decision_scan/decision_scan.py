@@ -1,0 +1,127 @@
+"""Staggered-cohort offload decisions over epochs as a Pallas kernel.
+
+The cluster simulator's per-epoch decision step is, per client, an argmin
+over the stacked (on-device | edges) cost row with on-device winning ties,
+a relative-improvement hysteresis check against the previously chosen
+target's CURRENT cost, and a cohort gate (client i re-decides only when
+``t % stagger == i % stagger``). Sequential in the epoch axis (the previous
+choice is the carry), embarrassingly parallel in the client axis — the same
+shape as the Lindley kernel next door, so the same state-resident pattern
+applies: each grid cell keeps a (blk_n, 1) block of previous choices in
+VMEM scratch for the whole epoch sweep and streams (e1, blk_n, blk_t) cost
+tiles through.
+
+Cost tables arrive time-major ``(T, N, E+1)`` (column 0 = on-device, the
+cluster convention) and are transposed to target-major ``(E+1, N, T)`` so
+the tiled axes are the client/epoch pair and the tiny target axis rides
+along whole. Epochs are innermost ("arbitrary") so the choice carry
+persists across t-blocks; the client axis is "parallel".
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decision_scan_kernel", "decision_scan_pallas"]
+
+ON_DEVICE = -1  # target index convention (repro.core.manager.ON_DEVICE)
+
+
+def _compiler_params(grid_len: int):
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+    sem = ("parallel",) * (grid_len - 1) + ("arbitrary",)
+    return cls(dimension_semantics=sem)
+
+
+def decision_scan_kernel(
+    h_ref,  # (1, 1) SMEM — hysteresis fraction
+    costs_ref,  # (e1, blk_n, blk_t) stacked per-target costs, target-major
+    cohort_ref,  # (blk_n, 1) int32 — client's decision cohort
+    c_ref,  # (blk_n, blk_t) int32 choices out
+    prev_ref,  # scratch (blk_n, 1) int32 — previous choice per client row
+    *,
+    blk_t: int,
+    stagger: int,
+):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        prev_ref[...] = jnp.full_like(prev_ref, ON_DEVICE)
+
+    e1, blk_n, _ = costs_ref.shape
+    h = h_ref[0, 0]
+    cohort = cohort_ref[...]  # (blk_n, 1)
+    tgt_ids = jax.lax.broadcasted_iota(jnp.int32, (e1, blk_n, 1), 0)
+
+    def step(t, prev):
+        tg = it * blk_t + t  # global epoch index
+        costs_t = costs_ref[:, :, pl.dslice(t, 1)]  # (e1, blk_n, 1)
+        # first-argmin: ties go to the lowest target index, i.e. on-device
+        choice = jnp.argmin(costs_t, axis=0).astype(jnp.int32) - 1  # (blk_n, 1)
+        predicted = jnp.min(costs_t, axis=0)
+        # one-hot gather of the previous target's CURRENT cost (the masked
+        # where keeps +inf saturated columns from poisoning the sum)
+        prev_t = jnp.sum(
+            jnp.where(tgt_ids == prev[None, :, :] + 1, costs_t, 0.0), axis=0)
+        keep = (
+            (tg >= stagger)
+            & (h > 0.0)
+            & (choice != prev)
+            & jnp.isfinite(prev_t)
+            & (predicted > (1.0 - h) * prev_t)
+        )
+        decided = jnp.where(keep, prev, choice)
+        new = jnp.where(cohort == tg % stagger, decided, prev).astype(jnp.int32)
+        c_ref[:, pl.dslice(t, 1)] = new
+        return new
+
+    prev_ref[...] = jax.lax.fori_loop(0, blk_t, step, prev_ref[...])
+
+
+def decision_scan_pallas(
+    costs: jax.Array,  # (T, N, E+1) stacked costs, column 0 = on-device
+    cohort: jax.Array,  # (N,) int32
+    *,
+    hysteresis: float = 0.0,
+    stagger: int = 1,
+    blk_n: int = 8,
+    blk_t: int = 128,
+    interpret: bool = False,
+):
+    """(T, N) int32 choice trajectory (ON_DEVICE or an edge index)."""
+    t, n, e1 = costs.shape
+    blk_n = min(blk_n, n)
+    blk_t = min(blk_t, t)
+    pad_n = (-n) % blk_n
+    pad_t = (-t) % blk_t
+    cm = jnp.transpose(costs, (2, 1, 0))  # (e1, N, T) target-major
+    co = cohort.astype(jnp.int32)[:, None]  # (N, 1)
+    if pad_n or pad_t:
+        # padded epochs run after every real one and padded clients are
+        # whole extra rows — both are sliced off below, values irrelevant
+        cm = jnp.pad(cm, ((0, 0), (0, pad_n), (0, pad_t)))
+        co = jnp.pad(co, ((0, pad_n), (0, 0)))
+    _, np_, tp = cm.shape
+    grid = (np_ // blk_n, tp // blk_t)
+    h = jnp.asarray(hysteresis, cm.dtype).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(decision_scan_kernel, blk_t=blk_t, stagger=stagger),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((e1, blk_n, blk_t), lambda i, it: (0, i, it)),
+            pl.BlockSpec((blk_n, 1), lambda i, it: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_n, blk_t), lambda i, it: (i, it)),
+        out_shape=jax.ShapeDtypeStruct((np_, tp), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((blk_n, 1), jnp.int32)],
+        compiler_params=_compiler_params(len(grid)),
+        interpret=interpret,
+    )(h, cm, co)
+    return out[:n, :t].T  # back to time-major (T, N)

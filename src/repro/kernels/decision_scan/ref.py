@@ -1,0 +1,49 @@
+"""Pure-jnp oracle: the staggered decision recurrence as a lax.scan.
+
+Semantically identical to the cluster simulator's per-epoch decide step
+(``repro.fleet.cluster._decide_vec`` plus the cohort gate) applied to
+precomputed cost tables — the coherence test pins the two decision for
+decision, so the kernel can never drift from the production rule.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decision_scan_reference"]
+
+ON_DEVICE = -1
+
+
+def decision_scan_reference(
+    costs: jax.Array,  # (T, N, E+1) stacked costs, column 0 = on-device
+    cohort: jax.Array,  # (N,) int32
+    *,
+    hysteresis: float = 0.0,
+    stagger: int = 1,
+) -> jax.Array:
+    """(T, N) int32 choice trajectory under first-argmin + hysteresis +
+    cohort staggering, from ``prev = ON_DEVICE``."""
+    t_n = costs.shape[0]
+    cohort = cohort.astype(jnp.int32)
+
+    def step(prev, inp):
+        c_t, idx = inp
+        choice = jnp.argmin(c_t, axis=1).astype(jnp.int32) - 1
+        predicted = jnp.min(c_t, axis=1)
+        prev_t = jnp.take_along_axis(c_t, (prev + 1)[:, None], axis=1)[:, 0]
+        keep = (
+            (idx >= stagger)
+            & (hysteresis > 0.0)
+            & (choice != prev)
+            & jnp.isfinite(prev_t)
+            & (predicted > (1.0 - hysteresis) * prev_t)
+        )
+        decided = jnp.where(keep, prev, choice)
+        new = jnp.where(cohort == idx % stagger, decided, prev).astype(jnp.int32)
+        return new, new
+
+    init = jnp.full(costs.shape[1], ON_DEVICE, dtype=jnp.int32)
+    _, out = jax.lax.scan(step, init, (costs, jnp.arange(t_n)))
+    return out

@@ -1,7 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: prove the distribution config is coherent.
 
 For every (architecture x input-shape) cell, ``jax.jit(step).lower(**specs)``
@@ -10,15 +6,19 @@ then ``.compile()`` against the production meshes — 16x16 single-pod and
 schedule, and per-device memory are consistent; failures here are bugs in the
 framework, not in XLA.
 
-The XLA_FLAGS line above MUST precede every other import (jax locks the
-device count at first init) — that is why it is the first statement in the
-module, and why this env var is set nowhere else (smoke tests and benchmarks
-see the real single-CPU device).
+The XLA_FLAGS line below MUST precede every other import (jax locks the
+device count at first init) — that is why it is the first statement after
+this docstring, and why this env var is set nowhere else (smoke tests and
+benchmarks see the real single-CPU device).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2_15b --shape train_4k --mesh single
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
 """
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
@@ -132,7 +132,8 @@ def run_cell(
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", choices=ARCH_IDS)
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")

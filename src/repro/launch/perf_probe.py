@@ -1,7 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Hillclimb instrumentation: per-layer vs fixed cost breakdown of a cell.
 
 Compiles the unrolled 1- and 2-superblock probes (same machinery as the
@@ -13,6 +9,10 @@ Usage:
   PYTHONPATH=src python -m repro.launch.perf_probe --arch gemma2_9b --shape train_4k \
       [--override seq_chunk=256] [--multi]
 """
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import dataclasses
@@ -53,11 +53,13 @@ def breakdown(arch: str, shape_name: str, *, multi_pod: bool = False, overrides=
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--multi", action="store_true")
-    ap.add_argument("--override", action="append", default=[])
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--arch", required=True, help="architecture id (see configs.base.ARCH_IDS)")
+    ap.add_argument("--shape", required=True, help="input shape id (e.g. train_4k)")
+    ap.add_argument("--multi", action="store_true", help="probe on the 2x16x16 multi-pod mesh")
+    ap.add_argument("--override", action="append", default=[],
+                    help="config override key=value (repeatable; value parsed as JSON)")
     args = ap.parse_args(argv)
     ov = {}
     for item in args.override:

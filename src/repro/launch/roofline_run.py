@@ -1,7 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Roofline analysis runner (EXPERIMENTS.md §Roofline).
 
 Per (arch x shape x mesh) cell:
@@ -20,6 +16,10 @@ Usage:
   PYTHONPATH=src python -m repro.launch.roofline_run --all --out experiments/roofline
   PYTHONPATH=src python -m repro.launch.roofline_run --arch jamba_v0_1_52b --shape train_4k
 """
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import dataclasses
@@ -139,7 +139,8 @@ def roofline_cell(
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", choices=ARCH_IDS)
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--mesh", choices=["single", "multi"], default="single")

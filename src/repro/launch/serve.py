@@ -28,7 +28,8 @@ __all__ = ["main"]
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", choices=ARCH_IDS, default="starcoder2_3b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rps", type=float, default=20.0)

@@ -24,7 +24,8 @@ __all__ = ["main"]
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
     ap.add_argument("--tiny", action="store_true", help="reduced config (CPU)")
     ap.add_argument("--steps", type=int, default=100)

@@ -4,8 +4,10 @@ Pushes every golden-corpus scenario through all four evaluation paths
 (scalar/vectorized closed forms, scalar/batched simulators) and writes
 ``VALIDATION.json`` — the repo's analogue of the paper's observed-vs-predicted
 latency table (§4.3: 2.2% mean MAPE, 91.5% within ±5%). Exit status is the
-gate: nonzero when scalar-vs-vectorized agreement, the golden pins, or the
-analytic-vs-simulated MAPE budget fail.
+gate: nonzero when any of the five sub-gates fail — scalar-vs-vectorized
+agreement (means and tail quantiles), the golden pins, the
+analytic-vs-simulated MAPE budget, the tail-percentile budget, or the
+mean-field-vs-exact equilibrium solver agreement.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.validate                  # full gate
@@ -68,6 +70,16 @@ def _print_report(rep, elapsed_s: float) -> None:
         print(f"  batched exact euler inversion: max rel err {ev['max_rel_err']:.2e} "
               f"over {ev['n_entries']} entries at rho <= {ev['rho_max']:.2f} "
               f"(tol {ev['tol']:.0e}) -> {'PASS' if ev['passed'] else 'FAIL'}")
+    mf = d["meanfield_gate"]
+    if mf is None:
+        print("  mean-field vs exact solver:    skipped")
+    elif not mf["converged"]:
+        print("  mean-field vs exact solver:    FAIL (a solver did not converge)")
+    else:
+        print(f"  mean-field vs exact solver:    max gated MAPE "
+              f"{mf['gated_max_mape_pct']:.2f}% over {mf['n_specs']} fleets "
+              f"(budget {mf['budget_pct']:.1f}%) "
+              f"-> {'PASS' if mf['passed'] else 'FAIL'}")
     tg = d["tail_gate"]
     if tg["n"] == 0:
         print(f"  analytic p{tg['tail_pct']:.0f} vs simulated:     not exercised "

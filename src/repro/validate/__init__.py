@@ -31,13 +31,16 @@ from .differential import (
     DEFAULT_EULER_VEC_TOL,
     DEFAULT_GOLDEN_TOL,
     DEFAULT_MAPE_BUDGET_PCT,
+    DEFAULT_MEANFIELD_BUDGET_PCT,
     DEFAULT_TAIL_BUDGET_PCT,
     DEFAULT_TAIL_PCT,
     DEFAULT_VEC_TOL,
     EULER_VEC_RHO_MAX,
     EntryReport,
     ValidationReport,
+    meanfield_gate_specs,
     run_differential,
+    run_meanfield_gate,
     smoke_subset,
     tail_gated,
 )

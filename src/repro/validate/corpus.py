@@ -380,6 +380,88 @@ def _cluster_entry(
     )
 
 
+def _meanfield_entry(
+    rng: np.random.Generator,
+    target_rho: float,
+    *,
+    sim_gate: bool = True,
+    smoke: bool = False,
+) -> CorpusEntry:
+    """Mean-field regime: a representative client's induced scenario at the
+    integerized mean-field fixed point of a small multi-class fleet (§6 at
+    the continuum limit).
+
+    The fleet has three client classes — two well-connected (steady/heavy)
+    whose combined rate lands the fast edge near ``target_rho``, and a
+    cellular class whose thin uplink keeps it on-device — so the solved
+    fractions are class-structured rather than uniform. The continuous
+    fractions are integerized per class by largest remainder, the
+    representative is the first client on the busiest edge, and its induced
+    view of the fixed point is pinned like any other multitenant entry: any
+    drift in the mean-field solver moves the induced spec and fails the
+    golden pin by name. The solver is deterministic, so regeneration stays
+    byte-identical."""
+    from repro.core.scenario import ClientClass, MeanFieldSpec
+    from repro.fleet.cluster import induced_scenario
+    from repro.fleet.meanfield import solve_meanfield_equilibrium
+
+    lam = _jitter(rng, 2.0)
+    classes = (
+        ClientClass(n_clients=6, arrival_scale=1.0, name="steady"),
+        ClientClass(n_clients=3, arrival_scale=2.0, name="heavy"),
+        ClientClass(n_clients=3, arrival_scale=0.5, bandwidth_scale=0.08,
+                    name="cellular"),
+    )
+    # the two well-connected classes' combined rate sets the fast edge's rho
+    offload_rate = (6 * 1.0 + 3 * 2.0) * lam
+    s_fast = _jitter(rng, target_rho / offload_rate, 0.05)
+    n_total = sum(c.n_clients for c in classes)
+    spec = MeanFieldSpec(
+        base=Scenario(
+            workload=Workload(arrival_rate=lam, req_bytes=40_000, res_bytes=2_000,
+                              name="corpus"),
+            device=Tier("tx2-dnn", 0.150),
+            network=NetworkPath(bandwidth_Bps=_BANDWIDTHS_BPS[1]),
+            edges=(
+                EdgeSpec(_tier("mf-fast", s_fast, ServiceModel.DETERMINISTIC, 0.0)),
+                EdgeSpec(_tier("mf-slow", 6.0 * s_fast,
+                               ServiceModel.DETERMINISTIC, 0.0)),
+            ),
+            name=f"mf-base-rho{target_rho:.2f}",
+        ),
+        classes=classes,
+        name=f"mf-{n_total}c-rho{target_rho:.2f}",
+    )
+    mf = solve_meanfield_equilibrium(spec)
+    assert mf.converged, "corpus mean-field fleet must reach its fixed point"
+    # integerize: per class, largest-remainder apportionment of n_c over targets
+    choice_list: list[int] = []
+    for c, cl in enumerate(spec.classes):
+        exact = cl.n_clients * mf.fractions[c]
+        counts = np.floor(exact).astype(np.int64)
+        order = np.argsort(-(exact - counts), kind="stable")
+        counts[order[: cl.n_clients - int(counts.sum())]] += 1
+        for tgt, k in enumerate(counts):
+            choice_list.extend([tgt - 1] * int(k))
+    choices = np.array(choice_list, dtype=np.int64)
+    on_edges = choices[choices >= 0]
+    assert on_edges.size, "corpus mean-field fixed point must offload"
+    j = int(np.argmax(np.bincount(on_edges, minlength=spec.n_edges)))
+    rep = int(np.nonzero(choices == j)[0][0])
+    scn = induced_scenario(spec.to_cluster(), choices, rep,
+                           name=f"mf-{n_total}c-rho{target_rho:.2f}")
+    strategy = f"edge[{j}]"
+    rho = bottleneck_rho(scn, strategy)
+    return CorpusEntry(
+        scenario=scn,
+        strategy=strategy,
+        regime="meanfield-equilibrium",
+        rho=rho,
+        sim_gate=sim_gate and rho <= 0.9,
+        smoke=smoke,
+    )
+
+
 def generate_corpus(seed: int = DEFAULT_SEED) -> tuple[CorpusEntry, ...]:
     """The golden corpus: deterministic in ``seed``, spanning tiers x
     bandwidth x arrival rate x tenancy x service-model mix x utilization
@@ -449,6 +531,13 @@ def generate_corpus(seed: int = DEFAULT_SEED) -> tuple[CorpusEntry, ...]:
                                  regime="tail-percentile"))
     entries.append(_offload_entry(rng, _EDGE_TIERS[2], 0.6, bound="compute",
                                   regime="tail-percentile"))
+
+    # -- mean-field equilibria (ROADMAP's million-client direction): the
+    # integerized fixed point of a class-structured fleet, gated like the
+    # cluster regime. Appended last, same prefix-stability discipline as
+    # tail-percentile above.
+    entries.append(_meanfield_entry(rng, 0.55))
+    entries.append(_meanfield_entry(rng, 0.82))
 
     names = [e.name for e in entries]
     assert len(names) == len(set(names)), "corpus entry names must be unique"

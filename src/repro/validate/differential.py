@@ -34,11 +34,24 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from repro.core.latency import ServiceModel
-from repro.core.scenario import analytic_tail, parse_strategy
+from repro.core.latency import NetworkPath, ServiceModel, Tier, Workload
+from repro.core.scenario import (
+    ClientClass,
+    EdgeSpec,
+    MeanFieldSpec,
+    Scenario,
+    analytic_tail,
+    parse_strategy,
+)
 from repro.core.scenario import simulate as scalar_simulate
 from repro.core.simulation import steady_slice
-from repro.fleet import ScenarioBatch, fleet_analytic, fleet_tail, simulate_fleet
+from repro.fleet import (
+    ScenarioBatch,
+    cross_check_meanfield,
+    fleet_analytic,
+    fleet_tail,
+    simulate_fleet,
+)
 
 from .corpus import BAND_ORDER, CorpusEntry
 from .metrics import BootstrapCI, ErrorStats, bootstrap_mean_ci, error_stats, error_table, mape
@@ -47,9 +60,12 @@ __all__ = [
     "EntryReport",
     "ValidationReport",
     "run_differential",
+    "run_meanfield_gate",
+    "meanfield_gate_specs",
     "smoke_subset",
     "tail_gated",
     "DEFAULT_MAPE_BUDGET_PCT",
+    "DEFAULT_MEANFIELD_BUDGET_PCT",
     "DEFAULT_VEC_TOL",
     "DEFAULT_GOLDEN_TOL",
     "DEFAULT_TAIL_BUDGET_PCT",
@@ -77,6 +93,13 @@ DEFAULT_TAIL_PCT = 99.0
 # conditioning degrades faster than any scalar/vec comparison can resolve.
 DEFAULT_EULER_VEC_TOL = 1e-8
 EULER_VEC_RHO_MAX = 0.95
+# meanfield gate: the class-aggregated Wardrop fixed point vs the exact
+# per-client equilibrium on fixed small fleets (both sides analytic, so the
+# block is cheap enough to run on every differential pass including smoke).
+# Gated rows are the <= rho_gate per-class latencies and busy-edge
+# utilizations cross_check_meanfield reports — same 5% contract as the
+# analytic-vs-simulated mean gate.
+DEFAULT_MEANFIELD_BUDGET_PCT = 5.0
 
 
 def tail_gated(e: CorpusEntry) -> bool:
@@ -104,6 +127,90 @@ def tail_gated(e: CorpusEntry) -> bool:
 def smoke_subset(entries: Sequence[CorpusEntry]) -> list[CorpusEntry]:
     """The fast tier-1 slice of the corpus (entries flagged ``smoke``)."""
     return [e for e in entries if e.smoke]
+
+
+def meanfield_gate_specs() -> tuple[MeanFieldSpec, ...]:
+    """The fixed small fleets the mean-field-vs-exact gate solves.
+
+    Deliberately constant (no seed, no jitter): the gate compares two
+    *solvers* on the same spec, so the specs themselves carry no golden
+    state to pin — the assertion is agreement, not a frozen value. Two
+    shapes: a mixed-rate fleet with a deterministic and an exponential edge
+    (the test-suite workhorse), and a heavier two-class fleet whose busy
+    edge sits in the high band where the continuum approximation is most
+    stressed below the gate's rho ceiling."""
+    base = Scenario(
+        workload=Workload(2.0, 30_000, 1_000, name="meanfield-gate"),
+        device=Tier("orin", 0.045),
+        network=NetworkPath(20e6 / 8),
+        edges=(
+            EdgeSpec(Tier("a2", 0.028)),
+            EdgeSpec(Tier("t4", 0.020, service_model=ServiceModel.EXPONENTIAL)),
+        ),
+        name="mf-gate-base",
+    )
+    mixed = MeanFieldSpec(
+        base=base,
+        classes=(
+            ClientClass(n_clients=16, arrival_scale=1.0, name="steady"),
+            ClientClass(n_clients=16, arrival_scale=0.5, name="light"),
+            ClientClass(n_clients=8, arrival_scale=2.0, bandwidth_scale=0.5,
+                        name="heavy"),
+        ),
+        name="mf-gate-mixed",
+    )
+    heavy = MeanFieldSpec(
+        base=Scenario(
+            workload=Workload(2.5, 40_000, 2_000, name="meanfield-gate"),
+            device=Tier("tx2", 0.150),
+            network=NetworkPath(20e6 / 8),
+            edges=(EdgeSpec(Tier("a2", 0.014)),
+                   EdgeSpec(Tier("a2-far", 0.028))),
+            name="mf-gate-heavy-base",
+        ),
+        classes=(
+            ClientClass(n_clients=24, arrival_scale=1.0, name="steady"),
+            ClientClass(n_clients=8, arrival_scale=1.5, name="heavy"),
+        ),
+        name="mf-gate-heavy",
+    )
+    return (mixed, heavy)
+
+
+def run_meanfield_gate(
+    specs: Sequence[MeanFieldSpec] | None = None,
+    *,
+    budget_pct: float = DEFAULT_MEANFIELD_BUDGET_PCT,
+) -> dict:
+    """Cross-check the mean-field solver against the exact one per spec.
+
+    Runs :func:`repro.fleet.cross_check_meanfield` on every spec and folds
+    the per-spec gated maxima into one pass/fail block shaped like the other
+    ``ValidationReport`` gates. Both solvers are deterministic and analytic,
+    so the result is reproducible and cheap (no simulation)."""
+    specs = meanfield_gate_specs() if specs is None else list(specs)
+    checks = []
+    for spec in specs:
+        r = cross_check_meanfield(spec)
+        checks.append({"spec": spec.name, "n_total": spec.n_total, **r})
+    gated_max = [c["gated_max_mape_pct"] for c in checks
+                 if c["gated_max_mape_pct"] is not None]
+    gated_mean = [c["gated_mean_mape_pct"] for c in checks
+                  if c["gated_mean_mape_pct"] is not None]
+    converged = all(c["meanfield_converged"] and c["exact_converged"]
+                    for c in checks)
+    max_pct = float(max(gated_max)) if gated_max else None
+    return {
+        "budget_pct": float(budget_pct),
+        "n_specs": len(checks),
+        "converged": converged,
+        "gated_max_mape_pct": max_pct,
+        "gated_mean_mape_pct": float(np.mean(gated_mean)) if gated_mean else None,
+        # a gate nobody exercised stays "pass, n=0" like the other gates, but
+        # a non-converged solver is always a loud failure
+        "passed": converged and (max_pct is None or max_pct <= budget_pct),
+        "specs": checks,
+    }
 
 
 def _rel_err(a: float, b: float) -> float:
@@ -190,6 +297,7 @@ class ValidationReport:
     euler_vec_max_rel_err: float | None = None  # batched exact euler vs scalar
     euler_vec_tol: float = DEFAULT_EULER_VEC_TOL
     euler_vec_n: int = 0  # corpus entries inside the rho <= 0.95 gate
+    meanfield: Mapping[str, object] | None = None  # run_meanfield_gate block
 
     @property
     def vec_passed(self) -> bool:
@@ -226,10 +334,14 @@ class ValidationReport:
         return self.tail.mean_pct <= self.tail_budget_pct
 
     @property
+    def meanfield_passed(self) -> bool:
+        return self.meanfield is None or bool(self.meanfield["passed"])
+
+    @property
     def passed(self) -> bool:
         return (self.vec_passed and self.golden_passed and self.gate_passed
                 and self.tail_vec_passed and self.euler_vec_passed
-                and self.tail_passed)
+                and self.tail_passed and self.meanfield_passed)
 
     def to_dict(self) -> dict:
         return {
@@ -269,6 +381,8 @@ class ValidationReport:
                 "n_entries": self.euler_vec_n,
                 "passed": self.euler_vec_passed,
             },
+            "meanfield_gate": None if self.meanfield is None
+            else dict(self.meanfield),
             "bands": {k: v.to_dict() for k, v in self.bands.items()},
             "regimes": {k: v.to_dict() for k, v in self.regimes.items()},
             "sim_cross": dict(self.sim_cross),
@@ -361,6 +475,8 @@ def run_differential(
     sim_cross_count: int = 3,
     tail_pct: float = DEFAULT_TAIL_PCT,
     tail_budget_pct: float = DEFAULT_TAIL_BUDGET_PCT,
+    meanfield: bool = True,
+    meanfield_budget_pct: float = DEFAULT_MEANFIELD_BUDGET_PCT,
 ) -> ValidationReport:
     """Cross-check all four evaluation paths over ``entries``.
 
@@ -373,6 +489,12 @@ def run_differential(
     (agreement gated at ``vec_tol``) and, where simulated, analytic quantile
     vs the observed ``percentile(tail_pct)`` (gated at ``tail_budget_pct``
     over :func:`tail_gated` entries — exact-transform paths at rho <= 0.9).
+
+    ``meanfield`` additionally runs :func:`run_meanfield_gate` — the
+    class-aggregated Wardrop solver vs the exact per-client equilibrium on
+    the fixed :func:`meanfield_gate_specs` fleets, gated at
+    ``meanfield_budget_pct`` — entirely analytic, so it runs even with
+    ``simulate=False``.
     """
     entries = list(entries)
     if not entries:
@@ -483,6 +605,9 @@ def run_differential(
     tail_gated_errs = [r.tail_mape_pct for r in reports
                        if r.tail_gate and r.tail_mape_pct is not None]
 
+    mf_report = run_meanfield_gate(budget_pct=meanfield_budget_pct) \
+        if meanfield else None
+
     golden_vals = [g for g in golden_errs if g is not None]
     return ValidationReport(
         entries=tuple(reports),
@@ -511,4 +636,5 @@ def run_differential(
         euler_vec_max_rel_err=euler_vec_max,
         euler_vec_tol=euler_vec_tol,
         euler_vec_n=len(euler_idx),
+        meanfield=mf_report,
     )

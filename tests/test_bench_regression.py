@@ -179,3 +179,25 @@ class TestRunOnlyValidation:
         rc = run_main(["--only", "fleet", "--only", "nope", "--out", str(tmp_path)])
         assert rc != 0  # nothing ran: the registry check precedes execution
         assert "nope" in capsys.readouterr().err
+
+    def test_comma_separated_families_split_before_validation(self, capsys, tmp_path):
+        # "--only a,b" must mean the families a and b, not one family "a,b";
+        # an unknown name inside the comma list still fails the whole run
+        rc = run_main(["--only", "fleet,nope", "--out", str(tmp_path)])
+        assert rc == 2
+        err = capsys.readouterr().err
+        assert "'nope'" in err and "fleet,nope" not in err
+
+    def test_comma_separated_known_families_run(self, capsys, tmp_path):
+        rc = run_main(["--only", "plan,obs", "--out", str(tmp_path)])
+        assert rc == 0
+        produced = {p.name for p in tmp_path.glob("BENCH_*.json")}
+        assert produced == {"BENCH_plan.json", "BENCH_obs.json"}
+
+    def test_only_with_no_parseable_names_is_rejected(self, capsys, tmp_path):
+        # a stray "--only ," must not silently fall back to running ALL
+        # families — that's the silently-wrong-artifact failure mode
+        rc = run_main(["--only", ",", "--out", str(tmp_path)])
+        assert rc == 2
+        assert "no family names parsed" in capsys.readouterr().err
+        assert not list(tmp_path.glob("BENCH_*.json"))

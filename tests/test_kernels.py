@@ -135,6 +135,65 @@ class TestSsmScan:
         np.testing.assert_allclose(y_one, y_many, rtol=1e-5, atol=1e-5)
 
 
+class TestDecisionScan:
+    @staticmethod
+    def _costs(T, N, E1, seed=4):
+        rng = np.random.default_rng(seed)
+        c = jnp.asarray(rng.exponential(0.05, (T, N, E1)), jnp.float32)
+        # saturated columns and exact ties must survive the kernel path
+        c = c.at[3, :, E1 - 1].set(jnp.inf)
+        c = c.at[5, 1 % N, :].set(0.07)
+        return c
+
+    @pytest.mark.parametrize("stagger,hysteresis", [(1, 0.0), (3, 0.0),
+                                                    (3, 0.15), (2, 0.4)])
+    def test_against_reference(self, stagger, hysteresis):
+        from repro.kernels.decision_scan.ops import decision_scan
+
+        T, N, E1 = 37, 13, 4
+        costs = self._costs(T, N, E1)
+        cohort = jnp.asarray(np.arange(N) % stagger, jnp.int32)
+        ref = decision_scan(costs, cohort, hysteresis=hysteresis,
+                            stagger=stagger, impl="xla")
+        out = decision_scan(costs, cohort, hysteresis=hysteresis,
+                            stagger=stagger, impl="interpret",
+                            blk_n=8, blk_t=16)
+        assert jnp.array_equal(ref, out)
+
+    def test_choice_carry_across_time_blocks(self):
+        """The VMEM-resident previous choice must persist across t-block grid
+        steps — hysteresis makes any drop in the carry visible."""
+        from repro.kernels.decision_scan.ops import decision_scan
+
+        costs = self._costs(64, 8, 3, seed=9)
+        cohort = jnp.asarray(np.arange(8) % 4, jnp.int32)
+        one = decision_scan(costs, cohort, hysteresis=0.3, stagger=4,
+                            impl="interpret", blk_n=8, blk_t=64)
+        many = decision_scan(costs, cohort, hysteresis=0.3, stagger=4,
+                             impl="interpret", blk_n=4, blk_t=8)
+        assert jnp.array_equal(one, many)
+
+    def test_reference_matches_cluster_decide_rule(self):
+        """The oracle is pinned to the production decision rule: iterate
+        ``repro.fleet.cluster._decide_vec`` by hand over the same tables."""
+        import jax.experimental
+
+        from repro.fleet.cluster import _decide_vec
+        from repro.kernels.decision_scan.ref import decision_scan_reference
+
+        T, N = 25, 6
+        with jax.experimental.enable_x64():
+            costs = jnp.asarray(np.asarray(self._costs(T, N, 4)), jnp.float64)
+            h, prev, manual = 0.15, jnp.full(N, -1, jnp.int32), []
+            for t in range(T):
+                prev = _decide_vec(costs[t, :, 0], costs[t, :, 1:], prev,
+                                   jnp.float64(h), jnp.bool_(t >= 1))
+                manual.append(np.asarray(prev))
+            ref = decision_scan_reference(costs, jnp.zeros(N, jnp.int32),
+                                          hysteresis=h, stagger=1)
+        assert np.array_equal(np.stack(manual), np.asarray(ref))
+
+
 class TestRmsNorm:
     @given(
         st.integers(1, 5),

@@ -1,0 +1,285 @@
+"""Mean-field cluster tests: ClientClass/MeanFieldSpec validation and
+expansion, Wardrop fixed-point convergence and self-consistency, the
+mean-field-vs-exact cross-check gate (<=5% MAPE), and the diurnal
+class-fraction replay (convergence to the static fixed point, adaptation
+to bandwidth dips, determinism)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClientClass,
+    EdgeSpec,
+    MeanFieldSpec,
+    NetworkPath,
+    Scenario,
+    ScenarioError,
+    ServiceModel,
+    Tier,
+    Workload,
+)
+from repro.fleet import (
+    TraceBatch,
+    cross_check_meanfield,
+    simulate_meanfield,
+    solve_equilibrium,
+    solve_meanfield_equilibrium,
+    step_signal,
+)
+
+
+def _base(**kw) -> Scenario:
+    defaults = dict(
+        workload=Workload(2.0, 30_000, 1_000, name="inceptionv4"),
+        device=Tier("orin", 0.045),
+        edges=(
+            EdgeSpec(Tier("a2", 0.028)),
+            EdgeSpec(Tier("t4", 0.020, service_model=ServiceModel.EXPONENTIAL)),
+        ),
+        network=NetworkPath(20e6 / 8),
+    )
+    defaults.update(kw)
+    return Scenario(**defaults)
+
+
+def _spec(**kw) -> MeanFieldSpec:
+    defaults = dict(
+        base=_base(),
+        classes=(
+            ClientClass(n_clients=16, arrival_scale=1.0, name="steady"),
+            ClientClass(n_clients=16, arrival_scale=0.5, name="light"),
+            ClientClass(n_clients=8, arrival_scale=2.0, bandwidth_scale=0.5,
+                        name="heavy"),
+        ),
+        name="mf-test",
+    )
+    defaults.update(kw)
+    return MeanFieldSpec(**defaults)
+
+
+class TestMeanFieldSpec:
+    def test_round_trip(self):
+        spec = _spec(classes=(
+            ClientClass(n_clients=4, arrival_scale=0.5, bandwidth_scale=2.0,
+                        device=Tier("nano", 0.120), name="slow"),
+            ClientClass(n_clients=8, name="plain"),
+        ))
+        assert MeanFieldSpec.from_dict(spec.to_dict()) == spec
+
+    def test_validation_named_fields(self):
+        with pytest.raises(ScenarioError, match="n_clients"):
+            ClientClass(n_clients=0)
+        with pytest.raises(ScenarioError, match="arrival_scale"):
+            ClientClass(n_clients=2, arrival_scale=-1.0)
+        with pytest.raises(ScenarioError, match="bandwidth_scale"):
+            ClientClass(n_clients=2, bandwidth_scale=0.0)
+        with pytest.raises(ScenarioError, match="classes"):
+            MeanFieldSpec(base=_base(), classes=())
+        no_edges = Scenario(workload=_base().workload, device=_base().device,
+                            network=_base().network, edges=())
+        with pytest.raises(ScenarioError, match="base.edges"):
+            MeanFieldSpec(base=no_edges, classes=(ClientClass(n_clients=2),))
+
+    def test_from_dict_missing_field_named(self):
+        with pytest.raises(ScenarioError, match="classes"):
+            MeanFieldSpec.from_dict({"base": _base().to_dict()})
+        with pytest.raises(ScenarioError, match=r"classes\[0\].n_clients"):
+            MeanFieldSpec.from_dict(
+                {"base": _base().to_dict(), "classes": [{"arrival_scale": 1.0}]})
+
+    def test_class_views(self):
+        spec = _spec()
+        assert spec.n_total == 40
+        assert spec.n_classes == 3
+        np.testing.assert_allclose(spec.arrival_rates(), [2.0, 1.0, 4.0])
+        np.testing.assert_allclose(spec.class_counts(), [16, 16, 8])
+        np.testing.assert_allclose(
+            spec.bandwidth_Bps(), [2.5e6, 2.5e6, 1.25e6])
+        np.testing.assert_allclose(
+            spec.bandwidth_Bps(1e6), [1e6, 1e6, 0.5e6])
+        idx = spec.class_index()
+        assert idx.shape == (40,)
+        assert list(idx[:16]) == [0] * 16 and list(idx[-8:]) == [2] * 8
+
+    def test_to_cluster_expansion(self):
+        spec = _spec()
+        cluster = spec.to_cluster()
+        assert cluster.n_clients == 40
+        lam = cluster.arrival_rates()
+        np.testing.assert_allclose(lam[:16], 2.0)
+        np.testing.assert_allclose(lam[16:32], 1.0)
+        np.testing.assert_allclose(lam[32:], 4.0)
+        assert cluster.base == spec.base
+
+    def test_to_cluster_refuses_device_overrides(self):
+        spec = _spec(classes=(
+            ClientClass(n_clients=4, device=Tier("nano", 0.120)),))
+        with pytest.raises(ScenarioError, match=r"classes\[0\].device"):
+            spec.to_cluster()
+        # an override equal to the base device is the base device: allowed
+        same = _spec(classes=(ClientClass(n_clients=4, device=_base().device),))
+        assert same.to_cluster().n_clients == 4
+
+    def test_device_tier_override(self):
+        spec = _spec(classes=(
+            ClientClass(n_clients=4, device=Tier("nano", 0.120), name="slow"),
+            ClientClass(n_clients=4, name="plain"),
+        ))
+        assert spec.device_tier(0).name == "nano"
+        assert spec.device_tier(1).name == "orin"
+
+
+class TestMeanFieldEquilibrium:
+    def test_converges_and_fractions_are_a_distribution(self):
+        mf = solve_meanfield_equilibrium(_spec())
+        assert mf.converged
+        assert mf.regret_pct <= 1e-3
+        np.testing.assert_allclose(mf.fractions.sum(axis=1), 1.0, atol=1e-12)
+        assert np.all(mf.fractions >= 0)
+        assert np.all(np.isfinite(mf.latency_s))
+
+    def test_fixed_point_is_self_consistent(self):
+        """Wardrop condition: every occupied sub-cohort's staying cost is
+        within the regret tolerance of the best move available TO IT (its own
+        cost row — self-exclusion makes ``cost[c, m, j] != cost[c, j, j]`` by
+        one marginal client, so rows are not comparable across cohorts)."""
+        mf = solve_meanfield_equilibrium(_spec())
+        c_n, e1 = mf.fractions.shape
+        assert mf.cost_s.shape == (c_n, e1, e1)
+        np.testing.assert_allclose(
+            mf.class_latency_s, mf.cost_s[:, np.arange(e1), np.arange(e1)])
+        for c in range(c_n):
+            for m in range(e1):
+                if mf.fractions[c, m] > 1e-6:
+                    stay = mf.cost_s[c, m, m]
+                    best = mf.cost_s[c, m].min()
+                    assert stay <= best * (1 + 1e-4)
+
+    def test_loads_are_rate_weighted_fractions(self):
+        mf = solve_meanfield_equilibrium(_spec())
+        expect = np.sum(
+            (mf.counts * mf.arrival_rates)[:, None] * mf.fractions[:, 1:],
+            axis=0)
+        np.testing.assert_allclose(mf.edge_loads, expect, rtol=1e-12)
+
+    def test_acceptance_cross_check_within_5pct(self):
+        """The PR acceptance gate: mean-field matches the exact small-N
+        solver within 5% MAPE on per-class latencies and edge utilizations."""
+        rep = cross_check_meanfield(_spec())
+        assert rep["meanfield_converged"] and rep["exact_converged"]
+        assert rep["gated_max_mape_pct"] is not None
+        assert rep["gated_max_mape_pct"] <= 5.0
+
+    def test_expected_counts_track_exact_counts(self):
+        spec = _spec()
+        mf = solve_meanfield_equilibrium(spec)
+        eq = solve_equilibrium(spec.to_cluster(),
+                               bandwidth_Bps=np.repeat(
+                                   spec.bandwidth_Bps(),
+                                   [c.n_clients for c in spec.classes]))
+        mf_counts = mf.expected_counts()
+        for target, exact_n in eq.counts().items():
+            assert abs(mf_counts[target] - exact_n) <= max(4, 0.2 * spec.n_total)
+
+    def test_slower_device_class_offloads_more(self):
+        spec = _spec(classes=(
+            ClientClass(n_clients=8, device=Tier("nano", 0.200), name="slow"),
+            ClientClass(n_clients=8, name="fast"),
+        ))
+        mf = solve_meanfield_equilibrium(spec)
+        assert mf.converged
+        off = mf.fractions[:, 1:].sum(axis=1)
+        assert off[0] > off[1]
+
+    def test_uncontended_class_goes_all_edge(self):
+        """One light client-class, a fast idle edge: everyone offloads —
+        the mean-field twin of the exact solver's uncontended case."""
+        spec = _spec(classes=(ClientClass(n_clients=2, arrival_scale=0.25),))
+        mf = solve_meanfield_equilibrium(spec)
+        assert mf.converged
+        assert mf.fractions[0, 0] < 1e-9
+        assert mf.offload_frac == pytest.approx(1.0)
+
+    def test_slo_quantile_mode(self):
+        mf = solve_meanfield_equilibrium(_spec(), slo_quantile=0.99)
+        assert mf.converged
+        mean = solve_meanfield_equilibrium(_spec())
+        # q-quantile costs dominate the means everywhere
+        assert np.all(mf.latency_s >= mean.latency_s - 1e-12)
+
+    def test_bandwidth_override_shapes(self):
+        spec = _spec()
+        with pytest.raises(ScenarioError, match="bandwidth_Bps"):
+            solve_meanfield_equilibrium(spec, bandwidth_Bps=np.ones(2))
+        mf = solve_meanfield_equilibrium(spec, bandwidth_Bps=1e6)
+        np.testing.assert_allclose(mf.bandwidth_Bps, [1e6, 1e6, 0.5e6])
+
+    def test_damping_validated(self):
+        with pytest.raises(ValueError, match="damping"):
+            solve_meanfield_equilibrium(_spec(), damping=0.0)
+        with pytest.raises(ValueError, match="slo_quantile"):
+            solve_meanfield_equilibrium(_spec(), slo_quantile=1.5)
+
+
+class TestSimulateMeanField:
+    def _traces(self, spec, drop_frac=None, duration=240.0, epoch=2.0):
+        times = np.arange(0.0, duration, epoch)
+        bw0 = spec.bandwidth_Bps()
+        sig = np.ones_like(times) if drop_frac is None else step_signal(
+            times, [(0.0, 1.0), (duration / 3, drop_frac),
+                    (2 * duration / 3, 1.0)])
+        bw = np.stack([bw0[c] * sig for c in range(spec.n_classes)], axis=1)
+        lam = np.broadcast_to(spec.arrival_rates(),
+                              (len(times), spec.n_classes)).copy()
+        exo = np.zeros((len(times), spec.n_edges))
+        return TraceBatch(times=times, bandwidth_Bps=bw, arrival_rate=lam,
+                          edge_bg_rate=exo)
+
+    def test_trace_class_count_mismatch_raises(self):
+        spec = _spec()
+        bad = self._traces(_spec(classes=(ClientClass(n_clients=4),)))
+        with pytest.raises(ScenarioError, match="traces"):
+            simulate_meanfield(spec, bad)
+
+    def test_switch_fraction_validated(self):
+        spec = _spec()
+        with pytest.raises(ValueError, match="switch_fraction"):
+            simulate_meanfield(spec, self._traces(spec), switch_fraction=0.0)
+
+    def test_constant_conditions_converge_to_fixed_point(self):
+        spec = _spec()
+        res = simulate_meanfield(spec, self._traces(spec))
+        mf = solve_meanfield_equilibrium(spec)
+        # the replay's terminal per-class latency matches the static fixed
+        # point (the fractions themselves may sit anywhere on the equal-cost
+        # plateau, so compare prices, not masses)
+        np.testing.assert_allclose(res.latency_s[-1], mf.latency_s, rtol=0.02)
+        np.testing.assert_allclose(
+            res.rho_edges[-1], mf.rho_edges, atol=0.05)
+
+    def test_adapts_to_bandwidth_dip(self):
+        spec = _spec()
+        res = simulate_meanfield(spec, self._traces(spec, drop_frac=0.08))
+        t_n = res.n_epochs
+        mid = slice(t_n // 3 + 5, 2 * t_n // 3)
+        # offloading retreats while the shared path is degraded
+        assert res.offload_frac[mid].mean() < res.offload_frac[:t_n // 3].mean()
+
+    def test_deterministic(self):
+        spec = _spec()
+        tr = self._traces(spec)
+        a = simulate_meanfield(spec, tr)
+        b = simulate_meanfield(spec, tr)
+        np.testing.assert_array_equal(a.fractions, b.fractions)
+        np.testing.assert_array_equal(a.latency_s, b.latency_s)
+
+    def test_shapes_and_throughput_accounting(self):
+        spec = _spec()
+        tr = self._traces(spec)
+        res = simulate_meanfield(spec, tr)
+        t_n, c_n, e_n = tr.n_epochs, spec.n_classes, spec.n_edges
+        assert res.fractions.shape == (t_n, c_n, e_n + 1)
+        assert res.edge_loads.shape == (t_n, e_n)
+        assert res.latency_s.shape == (t_n, c_n)
+        assert res.client_epochs == spec.n_total * t_n
+        assert res.saturated_epochs == 0

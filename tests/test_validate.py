@@ -28,8 +28,10 @@ from repro.validate import (
     generate_corpus,
     load_corpus,
     mape,
+    meanfield_gate_specs,
     rho_band,
     run_differential,
+    run_meanfield_gate,
     smoke_subset,
 )
 
@@ -131,7 +133,8 @@ class TestCorpus:
         bands = {e.band for e in entries}
         assert bands == set(BAND_ORDER), "corpus must span every utilization band"
         regimes = {e.regime for e in entries}
-        assert {"device-md1", "device-mm1", "device-mg1", "multitenant"} <= regimes
+        assert {"device-md1", "device-mm1", "device-mg1", "multitenant",
+                "cluster-equilibrium", "meanfield-equilibrium"} <= regimes
         assert any("aggregated-k" in r for r in regimes)
         assert any(e.scenario.edges and e.scenario.edges[0].background
                    for e in entries), "corpus needs multi-tenant scenarios"
@@ -182,6 +185,24 @@ class TestCorpus:
         b = generate_corpus(1)
         assert [e.name for e in a] == [e.name for e in b]  # same structure
         assert any(x.scenario != y.scenario for x, y in zip(a, b))  # jittered
+
+    def test_meanfield_regime_entries(self, corpus):
+        """The integerized mean-field fixed points land as gated multitenant-
+        style entries: the representative offloads, the other offloaded
+        clients are its per-stream background, and the cellular class keeps
+        some of the fleet on-device (class structure survived)."""
+        entries, _ = corpus
+        mf = [e for e in entries if e.regime == "meanfield-equilibrium"]
+        assert len(mf) >= 2
+        for e in mf:
+            assert e.strategy.startswith("edge[")
+            assert e.sim_gate and e.rho <= 0.9
+            j = int(e.strategy[5:-1])
+            bg = e.scenario.edges[j].background
+            assert len(bg) >= 2  # one stream per other offloaded client
+            # the cellular class stayed on-device: fewer background streams
+            # than fleet-members-minus-one
+            assert len(bg) < 11
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +257,36 @@ class TestDifferentialSmoke:
         assert back["passed"] is True
         assert back["scalar_vs_vec"]["max_rel_err"] <= 1e-6
         assert len(back["entries"]) == 3
+        # the meanfield gate runs even without simulation (analytic-only)
+        assert back["meanfield_gate"]["passed"] is True
+
+    def test_meanfield_gate_is_optional(self, corpus):
+        entries, _ = corpus
+        rep = run_differential(entries[:2], simulate=False, meanfield=False)
+        assert rep.meanfield is None and rep.meanfield_passed
+        assert rep.to_dict()["meanfield_gate"] is None
+        assert rep.passed
+
+
+class TestMeanFieldGate:
+    def test_gate_passes_within_budget(self):
+        """Acceptance: the class-aggregated solver reproduces the exact
+        per-client equilibrium to <= 5% gated MAPE on the fixed fleets."""
+        rep = run_meanfield_gate()
+        assert rep["n_specs"] == len(meanfield_gate_specs()) == 2
+        assert rep["converged"]
+        assert rep["gated_max_mape_pct"] is not None
+        assert rep["gated_max_mape_pct"] <= 5.0, rep
+        assert rep["passed"]
+        json.dumps(rep)  # report must be JSON-clean for VALIDATION.json
+
+    def test_gate_specs_are_deterministic(self):
+        a, b = meanfield_gate_specs(), meanfield_gate_specs()
+        assert [s.to_dict() for s in a] == [s.to_dict() for s in b]
+
+    def test_budget_is_enforced(self):
+        rep = run_meanfield_gate(budget_pct=1e-9)
+        assert not rep["passed"]  # real solvers always disagree by > 1e-9 %
 
 
 class TestCLI:

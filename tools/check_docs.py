@@ -1,0 +1,167 @@
+"""Docs gate: every link, file ref, and worked example in the docs is live.
+
+Three checks over ``README.md`` + ``docs/*.md``:
+
+  1. **Links** — every relative markdown link target exists (resolved
+     against the containing file's directory, falling back to the repo
+     root), and every ``#anchor`` resolves to a heading slug in the target
+     file (GitHub slug rules).
+  2. **File refs** — every backtick or bare reference to a repo path
+     (``src/``, ``tests/``, ``docs/``, ``benchmarks/``, ``tools/``,
+     ``examples/``, ``.github/``) exists, and every ``path.py:123`` line
+     anchor is within the file's current length — so the equation-to-code
+     map in docs/MODELS.md goes stale loudly, not silently.
+  3. **Worked examples** (skipped with ``--no-exec``) — the README's
+     ``python`` fences are executed top to bottom in one shared namespace
+     (they build on each other the way a reader runs them), and the
+     "Sizing the fleet" console example is run through the real provision
+     CLI. A fence preceded by ``<!-- check_docs: skip -->`` is not run.
+
+Usage:
+  PYTHONPATH=src python -m tools.check_docs            # full gate (CI)
+  PYTHONPATH=src python -m tools.check_docs --no-exec  # links/refs only
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+REF_PREFIXES = ("src/", "tests/", "docs/", "benchmarks/", "tools/",
+                "examples/", ".github/")
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# path.py:123 line anchors (optionally backticked)
+LINE_REF_RE = re.compile(
+    r"`?((?:src|tests|benchmarks|tools|examples)/[\w./-]+\.py):(\d+)`?")
+# backticked repo paths: `src/.../x.py`, `docs/CLI.md`, `benchmarks/baselines/`
+TICK_REF_RE = re.compile(
+    r"`((?:src|tests|docs|benchmarks|tools|examples|\.github)/[\w./-]+)`")
+FENCE_RE = re.compile(r"(<!--\s*check_docs:\s*skip\s*-->\s*\n)?```(\w+)\n(.*?)```",
+                      re.S)
+SKIP_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, strip punctuation, spaces->hyphens."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    h = h.lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(text: str) -> set[str]:
+    slugs: set[str] = set()
+    for m in re.finditer(r"^#{1,6}\s+(.+)$", text, re.M):
+        slugs.add(github_slug(m.group(1)))
+    return slugs
+
+
+def check_links(doc: Path, text: str, errors: list[str]) -> None:
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_EXTERNAL):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            cand = (doc.parent / path_part, REPO / path_part)
+            resolved = next((c for c in cand if c.exists()), None)
+            if resolved is None:
+                errors.append(f"{doc.name}: broken link target {target!r}")
+                continue
+        else:
+            resolved = doc
+        if anchor and resolved.suffix == ".md":
+            if anchor not in heading_slugs(resolved.read_text()):
+                errors.append(f"{doc.name}: anchor #{anchor} not found "
+                              f"in {resolved.name}")
+
+
+def check_file_refs(doc: Path, text: str, errors: list[str]) -> None:
+    for m in LINE_REF_RE.finditer(text):
+        rel, line = m.group(1), int(m.group(2))
+        p = REPO / rel
+        if not p.exists():
+            errors.append(f"{doc.name}: line ref to missing file {rel}")
+        elif line > len(p.read_text().splitlines()):
+            errors.append(f"{doc.name}: stale line ref {rel}:{line} "
+                          f"(file has {len(p.read_text().splitlines())} lines)")
+    for m in TICK_REF_RE.finditer(text):
+        rel = m.group(1)
+        if not rel.startswith(REF_PREFIXES):
+            continue
+        # strip a :line suffix already validated above
+        rel = rel.split(":")[0]
+        if not (REPO / rel).exists():
+            errors.append(f"{doc.name}: reference to missing path {rel}")
+
+
+def run_readme_examples(errors: list[str]) -> None:
+    """Execute the README's python fences in one shared namespace."""
+    text = (REPO / "README.md").read_text()
+    ns: dict = {}
+    for m in FENCE_RE.finditer(text):
+        skip, lang, body = m.group(1), m.group(2), m.group(3)
+        if lang != "python" or skip:
+            continue
+        line = text[: m.start()].count("\n") + 1
+        t0 = time.time()
+        try:
+            exec(compile(body, f"README.md:block@{line}", "exec"), ns)
+        except Exception as err:  # noqa: BLE001 - report, don't crash the gate
+            errors.append(f"README.md python block at line {line} failed: "
+                          f"{type(err).__name__}: {err}")
+            return  # later blocks may depend on this one's names
+        print(f"  README.md python block @ line {line}: "
+              f"OK ({time.time() - t0:.1f}s)")
+
+
+def run_provision_example(errors: list[str]) -> None:
+    """The 'Sizing the fleet' console example, run for real."""
+    from repro.launch.provision import main as provision_main
+
+    t0 = time.time()
+    rc = provision_main(["--clients", "48", "--slo-ms", "120",
+                         "--check-minimal"])
+    if rc != 0:
+        errors.append(f"'Sizing the fleet' worked example exited {rc}")
+    else:
+        print(f"  provision worked example: OK ({time.time() - t0:.1f}s)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--no-exec", action="store_true",
+                    help="check links and file refs only; skip running the "
+                         "worked examples")
+    args = ap.parse_args(argv)
+
+    errors: list[str] = []
+    for doc in DOC_FILES:
+        text = doc.read_text()
+        check_links(doc, text, errors)
+        check_file_refs(doc, text, errors)
+    print(f"checked links + file refs in {len(DOC_FILES)} docs")
+
+    if not args.no_exec:
+        print("running worked examples:")
+        run_readme_examples(errors)
+        run_provision_example(errors)
+
+    if errors:
+        print(f"\n{len(errors)} docs failures:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("docs gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
