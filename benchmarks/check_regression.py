@@ -22,8 +22,14 @@ default (portable) mode they still appear in the delta table as ``info``
 rows; the machine-insensitive headlines (speedups, MAPE, iteration counts,
 model means) are always gated.
 
+``--fresh`` accepts either a flat artifact directory (``benchmarks.run
+--out``) or a ``results/`` tree produced by ``repro.launch.reproduce`` —
+artifacts are found by name wherever they sit (``results/<exp-id>/<run-id>/
+seed-<s>/BENCH_*.json``); with several runs of one family the newest wins.
+
 Usage:
   python -m benchmarks.check_regression --fresh artifacts
+  python -m benchmarks.check_regression --fresh results
   python -m benchmarks.check_regression --fresh artifacts --machine-matched
   python -m benchmarks.check_regression --fresh artifacts --update-baselines
 """
@@ -136,12 +142,26 @@ def default_baseline_dir() -> Path:
     return Path(__file__).resolve().parent / "baselines"
 
 
+def resolve_artifact(root: Path, fname: str) -> Path | None:
+    """Locate a family artifact under ``root``: the flat layout first, then
+    anywhere in a nested ``results/`` tree (newest mtime wins when a family
+    appears in several runs). None when absent entirely."""
+    direct = root / fname
+    if direct.exists():
+        return direct
+    nested = [p for p in root.rglob(fname) if p.is_file()]
+    if not nested:
+        return None
+    return max(nested, key=lambda p: p.stat().st_mtime)
+
+
 def compare(
     fresh_dir: Path,
     baseline_dir: Path,
     *,
     tolerance: float = DEFAULT_TOLERANCE,
     machine_matched: bool = False,
+    families: list[str] | None = None,
 ) -> tuple[list[dict], int]:
     """(rows, n_regressions) over every headline family.
 
@@ -152,18 +172,23 @@ def compare(
     the gate is exactly what this tool exists to catch. Only a family absent
     from both directories is skipped (not part of this comparison at all; a
     deliberate partial run should point ``--fresh`` at a directory holding
-    just the families it wants compared AND baselined). ``machine_matched``
-    additionally gates the machine-bound (absolute wall-clock) headlines;
-    otherwise those are informational rows."""
+    just the families it wants compared AND baselined, or restrict the
+    comparison with ``families``). ``machine_matched`` additionally gates the
+    machine-bound (absolute wall-clock) headlines; otherwise those are
+    informational rows. ``families`` restricts the comparison to those
+    artifact filenames (for declared partial runs, e.g. ``reproduce
+    --only``); None compares every headline family."""
     rows: list[dict] = []
     regressions = 0
     for fname, metrics in sorted(HEADLINES.items()):
-        fresh_path = fresh_dir / fname
-        base_path = baseline_dir / fname
-        if not fresh_path.exists() and not base_path.exists():
+        if families is not None and fname not in families:
             continue
-        fresh = json.loads(fresh_path.read_text()) if fresh_path.exists() else {}
-        base = json.loads(base_path.read_text()) if base_path.exists() else {}
+        fresh_path = resolve_artifact(fresh_dir, fname)
+        base_path = resolve_artifact(baseline_dir, fname)
+        if fresh_path is None and base_path is None:
+            continue
+        fresh = json.loads(fresh_path.read_text()) if fresh_path else {}
+        base = json.loads(base_path.read_text()) if base_path else {}
         for metric, (direction, tol, machine_bound) in metrics.items():
             tol = tolerance if tol is None else tol
             gated = machine_matched or not machine_bound
@@ -198,7 +223,8 @@ def compare(
     return rows, regressions
 
 
-def manifest_notes(fresh_dir: Path, baseline_dir: Path) -> list[str]:
+def manifest_notes(fresh_dir: Path, baseline_dir: Path,
+                   families: list[str] | None = None) -> list[str]:
     """Informational provenance-drift notes: for every compared family whose
     fresh artifact AND baseline both carry a ``manifest`` block, report what
     differs (git sha, package versions, platform). Purely informational —
@@ -210,8 +236,11 @@ def manifest_notes(fresh_dir: Path, baseline_dir: Path) -> list[str]:
         return []
     notes: list[str] = []
     for fname in sorted(HEADLINES):
-        fresh_path, base_path = fresh_dir / fname, baseline_dir / fname
-        if not (fresh_path.exists() and base_path.exists()):
+        if families is not None and fname not in families:
+            continue
+        fresh_path = resolve_artifact(fresh_dir, fname)
+        base_path = resolve_artifact(baseline_dir, fname)
+        if fresh_path is None or base_path is None:
             continue
         try:
             fm = json.loads(fresh_path.read_text()).get("manifest")
@@ -237,15 +266,34 @@ def print_table(rows: list[dict]) -> None:
               f"{delta:>8s} {r['tol_pct']:5.0f}%  {r['status']}")
 
 
+# manifest fields that survive into a committed baseline: portable run
+# identity only. git sha, python/platform, and package versions are bound to
+# the machine that recorded the baseline and would otherwise emit perpetual
+# informational drift notes on every foreign rerun.
+_PORTABLE_MANIFEST_KEYS = ("manifest_version", "seed", "config_sha256")
+
+
+def _strip_manifest(doc: dict) -> dict:
+    m = doc.get("manifest")
+    if isinstance(m, dict):
+        doc = dict(doc)
+        doc["manifest"] = {k: m[k] for k in _PORTABLE_MANIFEST_KEYS if k in m}
+    return doc
+
+
 def update_baselines(fresh_dir: Path, baseline_dir: Path) -> list[str]:
     """Copy every known family artifact from ``fresh_dir`` into the baseline
-    directory (whole files, so future headline additions have data)."""
+    directory (whole files, so future headline additions have data), with the
+    machine/git-bound manifest fields stripped down to
+    ``_PORTABLE_MANIFEST_KEYS`` — committed baselines travel with the repo
+    and must not pin the provenance of whoever last refreshed them."""
     baseline_dir.mkdir(parents=True, exist_ok=True)
     copied = []
     for fname in HEADLINES:
-        src = fresh_dir / fname
-        if src.exists():
-            (baseline_dir / fname).write_text(src.read_text())
+        src = resolve_artifact(fresh_dir, fname)
+        if src is not None:
+            doc = _strip_manifest(json.loads(src.read_text()))
+            (baseline_dir / fname).write_text(json.dumps(doc, indent=2) + "\n")
             copied.append(fname)
     return copied
 

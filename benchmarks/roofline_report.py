@@ -10,6 +10,8 @@ from .common import emit
 
 def print_roofline_rows(directory: Path) -> None:
     for f in sorted(directory.glob("*.json")):
+        if f.name == "manifest.json":  # dir-level provenance, not a cell
+            continue
         r = json.loads(f.read_text())
         name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
         derived = (

@@ -32,6 +32,11 @@ An unknown ``--only`` family is an error (nonzero exit, known families
 listed) — CI relies on that exit code, so a typo can never silently run
 nothing and upload an empty artifact as green.
 
+The family list is not declared here: ``BENCHES`` derives from the single
+experiment registry in ``repro.exp.spec``, so this CLI, ``repro.launch
+.reproduce``, and the regression gate can never disagree about what exists.
+This entry point keeps its historical flags, CSV contract, and exit codes.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.run --out experiments/bench
   PYTHONPATH=src python -m benchmarks.run --only fleet --only kernels
@@ -63,62 +68,6 @@ def run_paper_figures(out_dir: Path) -> dict:
     return report
 
 
-def run_kernels(out_dir: Path) -> dict:
-    # kernel micro-benchmarks (interpret-mode correctness latency on CPU is
-    # not a perf claim; rows document call overhead + validated tolerance)
-    from .kernel_bench import kernel_rows
-
-    return kernel_rows(out_dir)
-
-
-def run_measure(out_dir: Path) -> dict:
-    from .measure_bench import measure_rows
-
-    return measure_rows(out_dir)
-
-
-def run_fleet(out_dir: Path) -> dict:
-    from .fleet_bench import fleet_rows
-
-    return fleet_rows(out_dir)
-
-
-def run_cluster(out_dir: Path) -> dict:
-    from .cluster_bench import cluster_rows
-
-    return cluster_rows(out_dir)
-
-
-def run_meanfield(out_dir: Path) -> dict:
-    from .meanfield_bench import meanfield_rows
-
-    return meanfield_rows(out_dir)
-
-
-def run_validate(out_dir: Path) -> dict:
-    from .validate_bench import validate_rows
-
-    return validate_rows(out_dir)
-
-
-def run_tail(out_dir: Path) -> dict:
-    from .tail_bench import tail_rows
-
-    return tail_rows(out_dir)
-
-
-def run_obs(out_dir: Path) -> dict:
-    from .obs_bench import obs_rows
-
-    return obs_rows(out_dir)
-
-
-def run_plan(out_dir: Path) -> dict:
-    from .plan_bench import plan_rows
-
-    return plan_rows(out_dir)
-
-
 def run_roofline(out_dir: Path) -> dict:
     # roofline table from dry-run artifacts, if present
     roof = Path("experiments/roofline")
@@ -129,19 +78,29 @@ def run_roofline(out_dir: Path) -> dict:
     return {}
 
 
-BENCHES = {
-    "paper_figures": run_paper_figures,
-    "kernels": run_kernels,
-    "fleet": run_fleet,
-    "cluster": run_cluster,
-    "meanfield": run_meanfield,
-    "validate": run_validate,
-    "tail": run_tail,
-    "measure": run_measure,
-    "obs": run_obs,
-    "plan": run_plan,
-    "roofline": run_roofline,
-}
+def _family_runner(payload: str):
+    """A ``fn(out_dir) -> report`` wrapper over a registry payload, resolved
+    lazily so importing this module stays cheap (and so the registry's
+    ``benchmarks.run:*`` payloads don't import-cycle at module load)."""
+    def run(out_dir: Path) -> dict:
+        from repro.exp.runner import resolve_payload
+
+        return resolve_payload(payload)(out_dir)
+    return run
+
+
+def _benches() -> dict:
+    from repro.exp.spec import bench_family_specs
+
+    return {family: _family_runner(spec.payload)
+            for family, spec in bench_family_specs().items()}
+
+
+#: family -> runner, derived from the ONE experiment registry
+#: (``repro.exp.spec``): a family added there is automatically runnable
+#: here, reproducible via ``repro.launch.reproduce``, and checked for
+#: registry completeness by tests/test_exp.py
+BENCHES = _benches()
 
 
 def stamp_manifests(out_dir: Path) -> None:

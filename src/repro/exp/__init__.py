@@ -1,0 +1,39 @@
+"""repro.exp — declared experiments and manifest-driven reproduction.
+
+``spec`` holds the frozen :class:`ExperimentSpec` and the single registry of
+every experiment the repo knows how to run; ``runner`` executes a spec into
+an isolated ``results/<exp-id>/<run-id>/`` directory with provenance,
+cross-seed bootstrap CIs, resume-skip semantics, and a byte-stability
+contract; ``payloads`` hosts the non-bench payload callables. The
+``reproduce`` CLI (:mod:`repro.launch.reproduce`) replays the whole registry.
+"""
+
+from repro.exp.spec import (
+    KINDS,
+    ExperimentError,
+    ExperimentSpec,
+    bench_family_specs,
+    registry,
+)
+from repro.exp.runner import (
+    RunResult,
+    diff_results,
+    resolve_payload,
+    run_experiment,
+    run_id_for,
+    strip_volatile,
+)
+
+__all__ = [
+    "KINDS",
+    "ExperimentError",
+    "ExperimentSpec",
+    "RunResult",
+    "bench_family_specs",
+    "diff_results",
+    "registry",
+    "resolve_payload",
+    "run_experiment",
+    "run_id_for",
+    "strip_volatile",
+]

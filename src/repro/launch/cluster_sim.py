@@ -271,8 +271,18 @@ def _default_trace_spec(args, bw0: float) -> dict:
                               (2 * third, bw0)]}
 
 
-def _write_report(out: Path | None, report: dict) -> None:
+def _write_report(out: Path | None, report: dict, args=None) -> None:
     if out:
+        if "manifest" not in report:
+            from repro.obs import run_manifest
+
+            seed = getattr(args, "seed", None)
+            config = None
+            if args is not None:
+                config = {"mode": report.get("mode"),
+                          "clients": getattr(args, "clients", None),
+                          "duration": getattr(args, "duration", None)}
+            report["manifest"] = run_manifest(seed=seed, config=config)
         out.parent.mkdir(parents=True, exist_ok=True)
         out.write_text(json.dumps(report, indent=2))
         print(f"wrote {out}")
@@ -369,7 +379,7 @@ def _run_exact(args, ts: dict | None) -> int:
         if gated_max is not None and gated_max > 5.0:
             rc = 1
 
-    _write_report(args.out, report)
+    _write_report(args.out, report, args)
     return rc
 
 
@@ -507,7 +517,7 @@ def _run_meanfield(args, ts: dict | None) -> int:
         if not conv or (gated is not None and gated > 5.0):
             rc = 1
 
-    _write_report(args.out, report)
+    _write_report(args.out, report, args)
     return rc
 
 

@@ -156,7 +156,13 @@ def main(argv=None) -> int:
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
     outdir = Path(args.out) if args.out else None
     if outdir:
+        from repro.obs import run_manifest
+
         outdir.mkdir(parents=True, exist_ok=True)
+        # per-cell records stay lean; one provenance manifest covers the dir
+        (outdir / "manifest.json").write_text(json.dumps(
+            run_manifest(config={"mesh": args.mesh, "cells": len(cells)}),
+            indent=2))
 
     failures = []
     for arch, shape_name in cells:

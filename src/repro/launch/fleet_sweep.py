@@ -25,6 +25,7 @@ import numpy as np
 from repro.core.latency import NetworkPath, Tier, Workload
 from repro.core.scenario import EdgeSpec, Scenario
 from repro.fleet import ScenarioBatch, fleet_analytic, fleet_crossover
+from repro.obs import run_manifest
 
 __all__ = ["default_scenario", "parse_axis", "run_sweep", "main"]
 
@@ -142,6 +143,11 @@ def main(argv=None) -> int:
         }
 
     report = run_sweep(base, axes, crossover_axis=args.crossover, repeat=args.repeat)
+    report["manifest"] = run_manifest(config={
+        "axes": {path: len(vals) for path, vals in axes.items()},
+        "scenario": str(args.scenario) if args.scenario else "builtin",
+        "crossover": args.crossover, "repeat": args.repeat,
+    })
     t = report["timing"]
     print(f"fleet sweep: {report['batch_size']} scenarios "
           f"(pack {t['pack_ms']:.1f} ms, eval {t['eval_ms']:.2f} ms, "

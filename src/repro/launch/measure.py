@@ -97,7 +97,7 @@ def _add_profile_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--trace-out", type=Path, default=None,
                     help="also save the raw trace JSON")
     ap.add_argument("--out", type=Path, default=None,
-                    help="profile path (default PROFILE_<arch>.json)")
+                    help="profile path (default results/PROFILE_<arch>.json)")
 
 
 def _harness_config(args) -> HarnessConfig:
@@ -129,7 +129,7 @@ def main(argv=None) -> int:
     p_fit.add_argument("--trace", type=Path, required=True)
     p_fit.add_argument("--seed", type=int, default=0, help="bootstrap seed")
     p_fit.add_argument("--out", type=Path, default=None,
-                       help="profile path (default PROFILE_<arch>.json)")
+                       help="profile path (default results/PROFILE_<arch>.json)")
 
     p_val = sub.add_parser("validate", help="gate analytic vs observed latencies")
     p_val.add_argument("--profile", type=Path, default=None,
@@ -145,7 +145,7 @@ def main(argv=None) -> int:
                        help="p99 MAPE budget %% "
                             f"(default {DEFAULT_MEASURED_TAIL_BUDGET_PCT})")
     p_val.add_argument("--report-out", type=Path,
-                       default=Path("VALIDATION_measured.json"),
+                       default=Path("results/VALIDATION_measured.json"),
                        help="gate report path (default ./VALIDATION_measured.json)")
 
     args = ap.parse_args(argv)
@@ -160,7 +160,7 @@ def main(argv=None) -> int:
         profile = build_profile(trace, seed=args.seed,
                                 manifest=run_manifest(seed=hc.seed,
                                                       config=hc.to_dict()))
-        out = args.out or Path(f"PROFILE_{profile.arch}.json")
+        out = args.out or Path(f"results/PROFILE_{profile.arch}.json")
         profile.save(out)
         _print_profile(profile)
         print(f"wrote {out} in {time.perf_counter() - t0:.1f}s")
@@ -171,7 +171,7 @@ def main(argv=None) -> int:
         profile = build_profile(trace, seed=args.seed,
                                 manifest=run_manifest(seed=trace.harness.seed,
                                                       config=trace.harness.to_dict()))
-        out = args.out or Path(f"PROFILE_{profile.arch}.json")
+        out = args.out or Path(f"results/PROFILE_{profile.arch}.json")
         profile.save(out)
         _print_profile(profile)
         print(f"wrote {out}")

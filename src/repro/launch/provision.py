@@ -145,9 +145,14 @@ def main(argv=None) -> int:
             rc = 1
 
     if args.out:
+        from repro.obs import run_manifest
+
         args.out.parent.mkdir(parents=True, exist_ok=True)
         report = {"space": space.to_dict(), "plan": plan.to_dict(),
-                  "solve_s": solve_s}
+                  "solve_s": solve_s,
+                  "manifest": run_manifest(config={
+                      "clients": args.clients, "slo_ms": args.slo_ms,
+                      "q": args.q})}
         args.out.write_text(json.dumps(report, indent=2))
         print(f"wrote {args.out}")
     return rc

@@ -152,6 +152,13 @@ def main(argv=None) -> int:
     outdir = Path(args.out)
     outdir.mkdir(parents=True, exist_ok=True)
     dr = Path(args.dryrun_dir)
+    from repro.obs import run_manifest
+
+    # per-cell reports stay lean; one provenance manifest covers the dir
+    # (roofline_report skips it when emitting rows)
+    (outdir / "manifest.json").write_text(json.dumps(
+        run_manifest(config={"mesh": args.mesh, "all": bool(args.all)}),
+        indent=2))
 
     cells = []
     if args.all:

@@ -9,21 +9,27 @@ agreement (means and tail quantiles), the golden pins, the
 analytic-vs-simulated MAPE budget, the tail-percentile budget, or the
 mean-field-vs-exact equilibrium solver agreement.
 
+The gate itself lives in ``repro.exp.payloads.run_validate`` — this CLI is a
+thin shim over the same engine the experiment registry runs (the
+``validate-smoke`` / ``validate-full`` specs), so ``reproduce`` and this
+entry point can never disagree. Flags and exit codes are unchanged; the
+report lands under the launch-wide ``results/`` convention by default
+(explicit ``--out`` paths keep working).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.validate                  # full gate
   PYTHONPATH=src python -m repro.launch.validate --smoke          # tier-1 subset
   PYTHONPATH=src python -m repro.launch.validate --regenerate     # rebuild fixture
-  PYTHONPATH=src python -m repro.launch.validate --out experiments/VALIDATION.json
+  PYTHONPATH=src python -m repro.launch.validate --out results/VALIDATION.json
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 from pathlib import Path
 
-from repro.obs import run_manifest
+from repro.exp.payloads import run_validate
 from repro.validate import (
     DEFAULT_MAPE_BUDGET_PCT,
     DEFAULT_SEED,
@@ -31,10 +37,7 @@ from repro.validate import (
     DEFAULT_TAIL_PCT,
     default_fixture_path,
     generate_corpus,
-    load_corpus,
-    run_differential,
     save_corpus,
-    smoke_subset,
 )
 
 __all__ = ["main"]
@@ -130,8 +133,8 @@ def main(argv=None) -> int:
                     help="bootstrap replicates per simulated mean")
     ap.add_argument("--no-sim", action="store_true",
                     help="skip simulation (analytic agreement + golden pins only)")
-    ap.add_argument("--out", type=Path, default=Path("VALIDATION.json"),
-                    help="fidelity report path (default ./VALIDATION.json)")
+    ap.add_argument("--out", type=Path, default=Path("results/VALIDATION.json"),
+                    help="fidelity report path (default results/VALIDATION.json)")
     args = ap.parse_args(argv)
 
     fixture = args.corpus if args.corpus is not None else default_fixture_path()
@@ -141,41 +144,21 @@ def main(argv=None) -> int:
         print(f"wrote {len(entries)} corpus entries to {fixture}")
         return 0
 
-    entries, meta = load_corpus(args.corpus)
-    expected = meta.get("expected_totals")
-    if args.smoke:
-        entries = smoke_subset(entries)
-    base_n = args.n if args.n is not None else (20_000 if args.smoke else 120_000)
-    max_factor = args.max_n_factor if args.max_n_factor is not None else \
-        (2.0 if args.smoke else 6.0)
-
-    t0 = time.perf_counter()
-    rep = run_differential(
-        entries,
-        expected_totals=expected,
-        base_n=base_n,
-        max_n_factor=max_factor,
+    rep, d = run_validate(
         seed=args.seed,
-        mape_budget_pct=args.budget,
-        bootstrap=args.bootstrap,
-        simulate=not args.no_sim,
-        sim_cross_count=2 if args.smoke else 3,
+        smoke=args.smoke,
+        corpus=args.corpus,
+        base_n=args.n,
+        max_n_factor=args.max_n_factor,
+        budget_pct=args.budget,
         tail_pct=args.tail_pct,
         tail_budget_pct=args.tail_budget,
+        bootstrap=args.bootstrap,
+        simulate=not args.no_sim,
     )
-    elapsed = time.perf_counter() - t0
-
-    d = rep.to_dict()
-    d["corpus"] = {"path": meta.get("path"), "seed": meta.get("seed"),
-                   "smoke": args.smoke, "elapsed_s": elapsed}
-    d["manifest"] = run_manifest(seed=args.seed, config={
-        "smoke": args.smoke, "base_n": base_n, "max_n_factor": max_factor,
-        "budget_pct": args.budget, "tail_pct": args.tail_pct,
-        "tail_budget_pct": args.tail_budget,
-    })
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(d, indent=2))
-    _print_report(rep, elapsed)
+    _print_report(rep, d["corpus"]["elapsed_s"])
     print(f"wrote {args.out}")
     return 0 if rep.passed else 1
 

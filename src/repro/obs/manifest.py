@@ -88,12 +88,18 @@ def manifest_delta(a: dict | None, b: dict | None) -> list[str]:
     """Human-readable list of provenance differences between two manifests.
 
     Empty list => same provenance (or one side has no manifest to compare —
-    absence is reported by the caller, not guessed at here).
+    absence is reported by the caller, not guessed at here). A drift key
+    missing entirely from one side is skipped, not drift: committed baselines
+    deliberately strip the machine/git-bound fields (see
+    ``check_regression --update-baselines``), and a stripped baseline vs a
+    full fresh manifest would otherwise report perpetual pseudo-drift.
     """
     if not a or not b:
         return []
     out: list[str] = []
     for key in _DRIFT_KEYS:
+        if key not in a or key not in b:
+            continue
         va, vb = a.get(key), b.get(key)
         if va == vb:
             continue

@@ -13,6 +13,7 @@ from benchmarks.check_regression import (
     compare,
     main as check_main,
     resolve,
+    resolve_artifact,
     update_baselines,
 )
 from benchmarks.run import BENCHES, main as run_main
@@ -163,6 +164,80 @@ class TestCheckRegression:
 
     def test_default_tolerance_is_thirty_percent(self):
         assert DEFAULT_TOLERANCE == pytest.approx(0.30)
+
+
+class TestResultsTreeSupport:
+    """check_regression reads reproduce-style results/ trees, restricts to
+    declared partial runs via ``families``, and commits portable baselines."""
+
+    def test_artifact_found_in_nested_results_tree(self, dirs):
+        fresh, base = dirs
+        nested = fresh / "bench-cluster" / "run-abc123" / "seed-0"
+        nested.mkdir(parents=True)
+        _write(nested, "BENCH_cluster.json", BASE_CLUSTER)
+        assert resolve_artifact(fresh, "BENCH_cluster.json") == \
+            nested / "BENCH_cluster.json"
+        _write(base, "BENCH_cluster.json", BASE_CLUSTER)
+        rows, regressions = compare(fresh, base)
+        assert regressions == 0
+        assert all(r["status"] in ("ok", "info") for r in rows)
+
+    def test_flat_layout_wins_over_nested(self, dirs):
+        fresh, _ = dirs
+        nested = fresh / "deep"
+        nested.mkdir()
+        _write(nested, "BENCH_cluster.json", {"x": 1})
+        _write(fresh, "BENCH_cluster.json", BASE_CLUSTER)
+        found = resolve_artifact(fresh, "BENCH_cluster.json")
+        assert found == fresh / "BENCH_cluster.json"
+
+    def test_families_filter_restricts_comparison(self, dirs):
+        """A declared partial run (reproduce --only) compares only what it
+        produced — absent families stay out instead of going MISSING."""
+        fresh, base = dirs
+        _write(fresh, "BENCH_cluster.json", BASE_CLUSTER)
+        _write(base, "BENCH_cluster.json", BASE_CLUSTER)
+        _write(base, "BENCH_plan.json", {"solver": {"wall_s": 1.0}})
+        rows, regressions = compare(fresh, base,
+                                    families=["BENCH_cluster.json"])
+        assert regressions == 0
+        assert {r["family"] for r in rows} == {"BENCH_cluster.json"}
+
+    def test_update_baselines_strips_machine_bound_manifest(self, dirs):
+        fresh, base = dirs
+        doc = dict(BASE_CLUSTER)
+        doc["manifest"] = {
+            "manifest_version": 1, "seed": 0, "config_sha256": "cafe",
+            "git": {"sha": "deadbeef", "dirty": False},
+            "python": "3.12.0", "platform": "Linux-x86",
+            "packages": {"jax": "0.4.0"},
+        }
+        _write(fresh, "BENCH_cluster.json", doc)
+        copied = update_baselines(fresh, base)
+        assert copied == ["BENCH_cluster.json"]
+        committed = json.loads((base / "BENCH_cluster.json").read_text())
+        assert committed["manifest"] == {
+            "manifest_version": 1, "seed": 0, "config_sha256": "cafe"}
+        # headline payload untouched
+        assert committed["equilibrium"] == BASE_CLUSTER["equilibrium"]
+
+    def test_stripped_baseline_emits_no_drift_notes(self, dirs):
+        """The satellite bug: stripped baselines vs a full fresh manifest
+        used to report every provenance key as perpetual drift."""
+        from benchmarks.check_regression import manifest_notes
+        from repro.obs import manifest_delta, run_manifest
+
+        fresh, base = dirs
+        full = dict(BASE_CLUSTER)
+        full["manifest"] = run_manifest(seed=0, config={"x": 1})
+        _write(fresh, "BENCH_cluster.json", full)
+        update_baselines(fresh, base)
+        assert manifest_notes(fresh, base) == []
+        stripped = {"manifest_version": 1, "seed": 0}
+        assert manifest_delta(stripped, full["manifest"]) == []
+        # genuine drift on a shared key still reported
+        other = dict(full["manifest"], git={"sha": "other", "dirty": False})
+        assert manifest_delta(full["manifest"], other)
 
 
 class TestRunOnlyValidation:

@@ -1,0 +1,293 @@
+"""The experiment layer: spec validation + round-trip, registry completeness
+(every bench family and validate regime exactly once, payloads resolve),
+runner semantics (resume-skip, output contract, multi-seed bootstrap CIs),
+two-run byte-stability of results/ artifacts, and the reproduce CLI."""
+
+import itertools
+import json
+from dataclasses import replace
+from pathlib import Path
+
+import pytest
+
+from repro.exp import (
+    ExperimentError,
+    ExperimentSpec,
+    bench_family_specs,
+    diff_results,
+    registry,
+    resolve_payload,
+    run_experiment,
+    run_id_for,
+    strip_volatile,
+)
+from repro.launch import reproduce
+
+# -- a controllable payload the runner resolves by dotted name ---------------
+# (tests/ is on sys.path under pytest, so "test_exp:fake_payload" resolves)
+
+_CALLS = itertools.count()
+
+
+def fake_payload(out_dir, seed, config):
+    doc = {
+        "value": 10.0 * (seed + 1) + float(config.get("offset", 0)),
+        "elapsed_s": 0.25 + next(_CALLS),  # wall-clock stand-in: never stable
+        "stable": "constant",
+    }
+    (Path(out_dir) / "OUT.json").write_text(json.dumps(doc, indent=2))
+    return {"value": doc["value"], "gate": {"passed": config.get("ok", True)}}
+
+
+def fake_spec(**over) -> ExperimentSpec:
+    kw = dict(
+        exp_id="fake-exp",
+        kind="bench-family",
+        payload="test_exp:fake_payload",
+        seeds=(0,),
+        seed_sensitive=True,
+        outputs=("OUT.json",),
+        volatile={"OUT.json": ("elapsed_s",)},
+    )
+    kw.update(over)
+    return ExperimentSpec(**kw)
+
+
+class TestSpec:
+    def test_round_trip_is_exact(self):
+        spec = fake_spec(config={"offset": 3}, gates={"budget_pct": 5.0},
+                         seeds=(0, 1))
+        assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+        # and the dict itself survives a JSON round trip unchanged
+        d = spec.to_dict()
+        assert json.loads(json.dumps(d)) == d
+
+    def test_from_dict_rejects_unknown_fields(self):
+        d = fake_spec().to_dict()
+        d["surprise"] = 1
+        with pytest.raises(ExperimentError, match="surprise"):
+            ExperimentSpec.from_dict(d)
+
+    def test_frozen(self):
+        with pytest.raises(AttributeError):
+            fake_spec().exp_id = "other"
+
+    @pytest.mark.parametrize("over,msg", [
+        ({"exp_id": "Bad Id"}, "exp_id"),
+        ({"kind": "bench"}, "kind"),
+        ({"payload": "no_colon"}, "payload"),
+        ({"seeds": ()}, "non-empty"),
+        ({"seeds": (1, 1)}, "duplicate seeds"),
+        ({"seeds": (-1,)}, ">= 0"),
+        ({"outputs": ("a.json", "a.json")}, "duplicate outputs"),
+        ({"volatile": {"other.json": ("x",)}}, "undeclared output"),
+    ])
+    def test_validation_is_loud(self, over, msg):
+        with pytest.raises(ExperimentError, match=msg):
+            fake_spec(**over)
+
+
+class TestRegistry:
+    def test_every_bench_module_registered_exactly_once(self):
+        """Registry completeness: each benchmarks/*_bench.py rows module
+        backs exactly one experiment — a new bench family that isn't
+        registered (or a stale registration) fails here."""
+        bench_dir = Path(__file__).resolve().parent.parent / "benchmarks"
+        modules = {f"benchmarks.{p.stem}" for p in bench_dir.glob("*_bench.py")}
+        payload_mods = [s.payload.split(":")[0] for s in registry().values()]
+        assert modules, "no bench modules found?"
+        for mod in sorted(modules):
+            assert payload_mods.count(mod) == 1, mod
+
+    def test_validate_regimes_present_exactly_once_each(self):
+        reg = registry()
+        regimes = [e for e, s in reg.items() if s.kind == "validate-regime"]
+        assert sorted(regimes) == ["validate-full", "validate-smoke"]
+        assert reg["validate-smoke"].config["smoke"] is True
+        assert reg["validate-full"].config["smoke"] is False
+
+    def test_benches_cli_derives_from_registry(self):
+        from benchmarks.run import BENCHES
+
+        assert set(BENCHES) == set(bench_family_specs())
+
+    def test_all_payloads_resolve(self):
+        for spec in registry().values():
+            assert callable(resolve_payload(spec.payload)), spec.exp_id
+
+    def test_kinds_cover_taxonomy(self):
+        kinds = {s.kind for s in registry().values()}
+        assert kinds == {"bench-family", "validate-regime", "figure",
+                         "measured-profile", "cluster-sim"}
+
+
+class TestStripVolatile:
+    def test_dotted_and_wildcard_paths(self):
+        doc = {"a": {"wall_s": 1.0, "keep": 2}, "b": {"wall_s": 3.0},
+               "top": 4}
+        out = strip_volatile(doc, ("*.wall_s", "top"))
+        assert out == {"a": {"keep": 2}, "b": {}}
+        assert doc["top"] == 4  # original untouched
+
+    def test_missing_paths_are_fine(self):
+        assert strip_volatile({"x": 1}, ("nope.deep",)) == {"x": 1}
+
+
+class TestRunner:
+    def test_run_layout_and_resume_skip(self, tmp_path):
+        spec = fake_spec()
+        res = run_experiment(spec, results_root=tmp_path)
+        assert not res.skipped and res.passed
+        assert res.run_dir == tmp_path / "fake-exp" / res.run_id
+        for fname in ("manifest.json", "metrics.json", "summary.md"):
+            assert (res.run_dir / fname).exists(), fname
+        assert (res.run_dir / "seed-0" / "OUT.json").exists()
+        manifest = json.loads((res.run_dir / "manifest.json").read_text())
+        assert manifest["experiment"]["spec"] == spec.to_dict()
+        assert manifest["experiment"]["seeds"] == [0]
+        # identical rerun: skipped, same dir, verdict preserved
+        again = run_experiment(spec, results_root=tmp_path)
+        assert again.skipped and again.passed
+        assert again.run_dir == res.run_dir
+        # force reruns in place
+        forced = run_experiment(spec, results_root=tmp_path, force=True)
+        assert not forced.skipped
+
+    def test_config_change_is_a_new_run(self, tmp_path):
+        a = run_experiment(fake_spec(), results_root=tmp_path)
+        b = run_experiment(fake_spec(config={"offset": 7}),
+                           results_root=tmp_path)
+        assert not b.skipped
+        assert a.run_id != b.run_id
+
+    def test_seeds_override_only_when_seed_sensitive(self, tmp_path):
+        res = run_experiment(fake_spec(), results_root=tmp_path,
+                             seeds=(0, 1, 2))
+        assert res.seeds == (0, 1, 2)
+        pinned = run_experiment(fake_spec(seed_sensitive=False),
+                                results_root=tmp_path, seeds=(0, 1, 2))
+        assert pinned.seeds == (0,)
+
+    def test_multi_seed_bootstrap_ci(self, tmp_path):
+        res = run_experiment(fake_spec(), results_root=tmp_path,
+                             seeds=(0, 1, 2))
+        agg = res.metrics["aggregate"]["value"]
+        assert agg["n_seeds"] == 3
+        assert agg["mean"] == pytest.approx(20.0)  # mean of 10, 20, 30
+        assert agg["ci95_lo"] <= agg["mean"] <= agg["ci95_hi"]
+        assert agg["seed_stable"] is False
+        assert (res.run_dir / "seed-2" / "OUT.json").exists()
+
+    def test_gate_failure_fails_the_run(self, tmp_path):
+        res = run_experiment(fake_spec(config={"ok": False}),
+                             results_root=tmp_path)
+        assert not res.passed
+        assert "FAIL" in (res.run_dir / "summary.md").read_text()
+
+    def test_missing_declared_output_is_loud(self, tmp_path):
+        spec = fake_spec(outputs=("OUT.json", "NEVER.json"),
+                         volatile={"OUT.json": ("elapsed_s",)})
+        with pytest.raises(ExperimentError, match="NEVER.json"):
+            run_experiment(spec, results_root=tmp_path)
+
+    def test_partial_run_is_not_resumed(self, tmp_path):
+        res = run_experiment(fake_spec(), results_root=tmp_path)
+        (res.run_dir / "summary.md").unlink()  # simulate a crash mid-write
+        again = run_experiment(fake_spec(), results_root=tmp_path)
+        assert not again.skipped
+
+
+class TestByteStability:
+    def test_two_runs_stable_with_volatile_masked(self, tmp_path):
+        spec = fake_spec()
+        run_experiment(spec, results_root=tmp_path / "a")
+        run_experiment(spec, results_root=tmp_path / "b")
+        reg = {spec.exp_id: spec}
+        assert diff_results(tmp_path / "a", tmp_path / "b", reg) == []
+
+    def test_undeclared_drift_is_caught(self, tmp_path):
+        spec = fake_spec()
+        run_experiment(spec, results_root=tmp_path / "a")
+        run_experiment(spec, results_root=tmp_path / "b")
+        # same trees, but pretend the spec never declared elapsed_s volatile
+        bare = {spec.exp_id: replace(spec, volatile={})}
+        diffs = diff_results(tmp_path / "a", tmp_path / "b", bare)
+        assert diffs and any("OUT.json" in d for d in diffs)
+
+    def test_missing_file_is_a_difference(self, tmp_path):
+        spec = fake_spec()
+        ra = run_experiment(spec, results_root=tmp_path / "a")
+        run_experiment(spec, results_root=tmp_path / "b")
+        (ra.run_dir / "seed-0" / "OUT.json").unlink()
+        diffs = diff_results(tmp_path / "a", tmp_path / "b",
+                             {spec.exp_id: spec})
+        assert any("only in" in d for d in diffs)
+
+
+class TestReproduceCLI:
+    def test_list_exits_zero(self, capsys):
+        assert reproduce.main(["--list"]) == 0
+        out = capsys.readouterr().out
+        for exp_id in registry():
+            assert exp_id in out
+
+    def test_unknown_only_exits_2_listing_registry(self, capsys):
+        rc = reproduce.main(["--only", "not-an-exp"])
+        assert rc == 2
+        err = capsys.readouterr().err
+        assert "not-an-exp" in err and "validate-smoke" in err
+
+    def test_no_selection_exits_2(self, capsys):
+        assert reproduce.main([]) == 2
+
+    def test_run_report_and_skip(self, tmp_path, monkeypatch, capsys):
+        spec = fake_spec()
+        monkeypatch.setattr(reproduce, "registry",
+                            lambda: {spec.exp_id: spec})
+        argv = ["--only", "fake-exp", "--seeds", "2",
+                "--results", str(tmp_path / "results"),
+                "--report", str(tmp_path / "REPRODUCTION.md")]
+        assert reproduce.main(argv) == 0
+        report = (tmp_path / "REPRODUCTION.md").read_text()
+        assert "fake-exp" in report and "PASS" in report
+        assert "| ran |" in report
+        # immediate rerun skips the completed run and still passes
+        assert reproduce.main(argv) == 0
+        assert "skipped" in capsys.readouterr().out
+        assert "skipped (complete)" in (tmp_path / "REPRODUCTION.md").read_text()
+
+    def test_gate_failure_exits_nonzero(self, tmp_path, monkeypatch):
+        spec = fake_spec(config={"ok": False})
+        monkeypatch.setattr(reproduce, "registry",
+                            lambda: {spec.exp_id: spec})
+        rc = reproduce.main(["--only", "fake-exp",
+                             "--results", str(tmp_path / "results"),
+                             "--report", str(tmp_path / "R.md")])
+        assert rc == 1
+        assert "FAIL" in (tmp_path / "R.md").read_text()
+
+    def test_diff_mode(self, tmp_path, monkeypatch, capsys):
+        spec = fake_spec()
+        run_experiment(spec, results_root=tmp_path / "a")
+        run_experiment(spec, results_root=tmp_path / "b")
+        monkeypatch.setattr(reproduce, "registry",
+                            lambda: {spec.exp_id: spec})
+        assert reproduce.main(["--diff", str(tmp_path / "a"),
+                               str(tmp_path / "b")]) == 0
+        assert "byte-stable" in capsys.readouterr().out
+
+
+class TestRealRegistryEndToEnd:
+    def test_validate_smoke_no_sim_through_runner(self, tmp_path):
+        """One real registry experiment end to end (analytic-only smoke
+        regime for speed): artifacts land under results/, the gate passes,
+        and VALIDATION.json carries its provenance manifest."""
+        base = registry()["validate-smoke"]
+        spec = replace(base, config={**base.config, "no_sim": True})
+        res = run_experiment(spec, results_root=tmp_path)
+        assert res.passed and not res.skipped
+        doc = json.loads(
+            (res.run_dir / "seed-0" / "VALIDATION.json").read_text())
+        assert doc["passed"] is True
+        assert doc["manifest"]["seed"] == 0
+        assert "elapsed_s" in doc["corpus"]

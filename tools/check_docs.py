@@ -13,9 +13,11 @@ Three checks over ``README.md`` + ``docs/*.md``:
      map in docs/MODELS.md goes stale loudly, not silently.
   3. **Worked examples** (skipped with ``--no-exec``) — the README's
      ``python`` fences are executed top to bottom in one shared namespace
-     (they build on each other the way a reader runs them), and the
-     "Sizing the fleet" console example is run through the real provision
-     CLI. A fence preceded by ``<!-- check_docs: skip -->`` is not run.
+     (they build on each other the way a reader runs them), the "Sizing
+     the fleet" console example is run through the real provision CLI, and
+     the "Reproduce every number" example runs one registry experiment
+     through ``repro.launch.reproduce`` including the resume-skip rerun.
+     A fence preceded by ``<!-- check_docs: skip -->`` is not run.
 
 Usage:
   PYTHONPATH=src python -m tools.check_docs            # full gate (CI)
@@ -134,6 +136,39 @@ def run_provision_example(errors: list[str]) -> None:
         print(f"  provision worked example: OK ({time.time() - t0:.1f}s)")
 
 
+def run_reproduce_example(errors: list[str]) -> None:
+    """The 'Reproduce every number' console example, run for real: one
+    registry experiment through the manifest runner, then the resume-skip
+    contract (an immediate rerun must skip the completed run)."""
+    import tempfile
+
+    from repro.launch.reproduce import main as reproduce_main
+
+    t0 = time.time()
+    with tempfile.TemporaryDirectory() as tmp:
+        argv = ["--only", "validate-smoke", "--seeds", "1",
+                "--results", f"{tmp}/results",
+                "--report", f"{tmp}/results/REPRODUCTION.md"]
+        rc = reproduce_main(argv)
+        if rc != 0:
+            errors.append(f"'Reproduce every number' worked example exited {rc}")
+            return
+        if not (Path(tmp) / "results" / "REPRODUCTION.md").exists():
+            errors.append("reproduce example wrote no REPRODUCTION.md")
+            return
+        runs = list((Path(tmp) / "results" / "validate-smoke").glob("run-*"))
+        if len(runs) != 1 or not (runs[0] / "summary.md").exists():
+            errors.append("reproduce example left no completed run directory")
+            return
+        if reproduce_main(argv) != 0:
+            errors.append("reproduce example rerun (resume-skip) failed")
+            return
+        if len(list((Path(tmp) / "results" / "validate-smoke").glob("run-*"))) != 1:
+            errors.append("reproduce rerun did not resume-skip (new run dir)")
+            return
+    print(f"  reproduce worked example: OK ({time.time() - t0:.1f}s)")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
@@ -153,6 +188,7 @@ def main(argv=None) -> int:
         print("running worked examples:")
         run_readme_examples(errors)
         run_provision_example(errors)
+        run_reproduce_example(errors)
 
     if errors:
         print(f"\n{len(errors)} docs failures:", file=sys.stderr)
